@@ -1,0 +1,56 @@
+"""Paper-faithful ablation quantizers (benchmarks only — NO guarantee
+claims; the production codec in repro.core uses pow2-floored steps).
+
+The paper's Fig 1 compares REL with library log/pow vs the bit-trick
+approximations, at the NATURAL step w = log2(1+eb).  Our production codec
+floors w to a power of two, which (a) makes arithmetic exact (FMA-immune)
+and (b) — measured here — absorbs the octave-slope variation of the
+piecewise-linear log2approx, so the bit-trick costs NO ratio vs the
+library.  To reproduce the paper's ~5% effect we need the free step:
+at w = log2(1+eb) the approximate-log bins are up to 2x wider than the
+true-log bins near octave tops, those values fail the double-check, and
+the outlier rate (= ratio loss) climbs.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import QuantizerConfig
+from repro.core.bitops import float_to_bits, log2approx, pow2approx
+
+
+def quantize_rel_freestep(x: jnp.ndarray, cfg: QuantizerConfig,
+                          library: bool):
+    """REL with the paper's natural step w = log2(1+eb) (not pow2-floored)
+    and either the bit-trick (library=False) or backend log2/exp2."""
+    dt = x.dtype
+    eb = dt.type(cfg.error_bound)
+    # the TIGHT step the paper's LC uses: centers at bin*w, half-width
+    # log2(1+eb) -> an EXACT log accepts (almost) everything, while the
+    # bit-trick's piecewise-linear slope error pushes values out
+    w = dt.type(2.0 * math.log2(1.0 + cfg.error_bound))
+    inv_w = dt.type(1.0) / w
+    maxbin = cfg.maxbin
+
+    finite = jnp.isfinite(x)
+    ax = jnp.abs(x)
+    too_small = ~(ax >= jnp.asarray(cfg.rel_screen_threshold(), dt))
+    safe = jnp.where(finite & ~too_small, ax, jnp.ones((), dt))
+    lg = jnp.log2(safe) if library else log2approx(safe)
+    bin_f = jnp.rint(lg * inv_w)
+    range_bad = jnp.abs(bin_f) >= jnp.asarray(float(maxbin), dt)
+    bin_i = jnp.where(range_bad, jnp.zeros_like(bin_f),
+                      bin_f).astype(jnp.int32)
+    mag = (jnp.exp2(bin_i.astype(dt) * w) if library
+           else pow2approx(bin_i.astype(dt) * w))
+    neg = float_to_bits(x) < 0
+    recon = jnp.where(neg, -mag, mag)
+    ebT = jnp.asarray(dt.type(eb) * dt.type(cfg.tighten), dt)
+    ok = (jnp.abs(x - recon) <= ebT * ax) & jnp.isfinite(recon)
+    ok &= mag >= jnp.asarray(np.finfo(dt).tiny, dt)
+    outlier = (~finite) | too_small | range_bad | ~ok
+    return jnp.where(outlier, 0, bin_i), outlier

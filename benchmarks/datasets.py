@@ -1,0 +1,95 @@
+"""Synthetic stand-ins for the paper's 7 SDRBench input suites (Table 2).
+
+The container is offline, so each generator mimics the statistical
+character of its suite (smoothness, dynamic range, noise floor) — enough
+for compression-ratio and rounding-outlier behavior to be representative.
+Sizes are scaled down (~4M values) to fit the CPU time budget; every
+generator is deterministic.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+N = 1 << 22     # ~4M floats per suite (~16 MiB)
+
+
+def _rng(name):
+    return np.random.default_rng(abs(hash(name)) % (1 << 32))
+
+
+def cesm():     # climate: smooth 2-D fields, strong spatial correlation
+    r = _rng("cesm")
+    grid = int(np.sqrt(N))
+    y, x = np.mgrid[0:grid, 0:grid] / grid
+    base = (np.sin(2 * np.pi * 3 * x) * np.cos(2 * np.pi * 2 * y)
+            + 0.3 * np.sin(2 * np.pi * 11 * (x + y)))
+    field = 240 + 50 * base + r.standard_normal((grid, grid)) * 0.2
+    return field.astype(np.float32).ravel()[:N]
+
+
+def exaalt():   # molecular dynamics: clustered coordinates, wide spread
+    r = _rng("exaalt")
+    centers = r.uniform(-50, 50, (64, 1))
+    pts = (centers[r.integers(0, 64, N)][:, 0]
+           + r.standard_normal(N) * 0.8)
+    return pts.astype(np.float32)
+
+
+def hacc():     # cosmology particles: near-uniform positions
+    r = _rng("hacc")
+    return (r.uniform(0, 256, N) + r.standard_normal(N) * 1e-3).astype(
+        np.float32)
+
+
+def isabel():   # hurricane: smooth vortex + turbulence
+    r = _rng("isabel")
+    grid = int(np.sqrt(N))
+    y, x = np.mgrid[0:grid, 0:grid] / grid - 0.5
+    rad = np.sqrt(x * x + y * y) + 1e-3
+    v = np.exp(-rad * 6) * np.sin(np.arctan2(y, x) * 2) * 60
+    v += r.standard_normal((grid, grid)) * 0.5
+    return v.astype(np.float32).ravel()[:N]
+
+
+def nyx():      # cosmology density: lognormal, heavy tail
+    r = _rng("nyx")
+    return np.exp(r.standard_normal(N) * 1.4 + 8.0).astype(np.float32)
+
+
+def qmcpack():  # quantum MC: oscillatory, decaying amplitudes
+    r = _rng("qmcpack")
+    t = np.arange(N, dtype=np.float64)
+    w = (np.sin(t * 0.01) * np.exp(-(t % 4096) / 2000)
+         + 0.01 * r.standard_normal(N))
+    return w.astype(np.float32)
+
+
+def scale():    # climate (SCALE-LETKF): smooth + fronts
+    r = _rng("scale")
+    grid = int(np.sqrt(N))
+    y, x = np.mgrid[0:grid, 0:grid] / grid
+    f = 300 + 30 * np.tanh((x - 0.5) * 8) + 10 * np.sin(2 * np.pi * 5 * y)
+    f += r.standard_normal((grid, grid)) * 0.05
+    return f.astype(np.float32).ravel()[:N]
+
+
+SUITES = {
+    "CESM": cesm, "EXAALT": exaalt, "HACC": hacc, "ISABEL": isabel,
+    "NYX": nyx, "QMCPACK": qmcpack, "SCALE": scale,
+}
+
+
+def special_values(n=1 << 16):
+    """The paper's generated special-value inputs: INF/NaN/denormal mix."""
+    r = _rng("specials")
+    bits = r.integers(0, 1 << 32, n, dtype=np.uint32)
+    x = bits.view(np.float32).copy()
+    x[:: 64] = np.inf
+    x[1:: 64] = -np.inf
+    x[2:: 64] = np.nan
+    x[3:: 64] = np.uint32(0x7FC00123).view(np.float32)   # NaN payload
+    x[4:: 64] = 1e-42                                    # denormal
+    x[5:: 64] = -1e-42
+    x[6:: 64] = 0.0
+    x[7:: 64] = -0.0
+    return x

@@ -1,0 +1,180 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh, derive the three terms:
+
+    compute    = HLO_dot_FLOPs_per_device / 197e12          [s]
+    memory     = HLO_bytes_per_device / 819e9               [s]
+    collective = per-device collective wire bytes / 50e9    [s]
+
+Sources: the SPMD HLO module is PER-DEVICE, so shapes parsed from it are
+already per-chip.  hlo_analysis multiplies everything by while-loop trip
+counts (XLA's cost_analysis counts loop bodies once — measured 40x low).
+`cost_flops`/`cost_bytes` columns keep the raw XLA numbers for contrast.
+
+Memory bytes: sum of materialized op outputs (fusion/dot/copy/...) x trip
+multipliers + entry parameters — an upper-ish bound on HBM traffic that
+ignores VMEM reuse within fusions (documented approximation).
+
+Collective seconds use kind factors: all-reduce 2x its payload (ring
+reduce-scatter + all-gather), others 1x their result size.
+
+MODEL_FLOPS = 6 * N_active * tokens (train; 2x for prefill-only, per-token
+for decode) — the `useful/HLO` ratio exposes remat and capacity waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+Writes results/roofline.json and prints the markdown table.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import registry                      # noqa: E402
+from repro.configs.base import SHAPES                   # noqa: E402
+from repro.launch import hlo_analysis as H              # noqa: E402
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# Only op classes whose OUTPUT actually round-trips HBM on TPU: fusion
+# roots, dots, explicit copies/slice-updates, gathers/scatters.  Loose
+# elementwise/convert/transpose/select ops fuse into consumers and were
+# over-counting memory ~10x (validated against analytic weight traffic).
+_MEM_OPS = ("fusion", "copy(", " dot(", "scatter", "gather(",
+            "dynamic-update-slice", "dynamic-slice", "convolution",
+            "custom-call")
+
+
+def memory_bytes(hlo: str) -> int:
+    comps = H.split_computations(hlo)
+    mult = H.computation_multipliers(hlo)
+    fused = H.fused_computations(comps)
+    entry = max((n for n in comps if "main" in n), key=len, default=None)
+    total = 0
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0 or name in fused:        # fusion internals stay in VMEM
+            continue
+        for ln in lines:
+            if not any(op in ln for op in _MEM_OPS):
+                # parameters: count HBM reads only at the entry (arguments);
+                # loop/fusion params alias already-counted buffers
+                if "parameter(" not in ln or name != entry:
+                    continue
+            sm = re.match(r"%?[\w\.\-]+ = \(?(\w+\[[\d,]*\])", ln)
+            if sm:
+                total += H._shape_bytes(sm.group(1)) * m
+    return total
+
+
+# XLA:CPU's AllReducePromotion pass rewrites every bf16 all-reduce as
+# convert->f32 AR->convert (CPU has no bf16 reduction); TPU reduces bf16
+# natively.  The dry-run HLO therefore shows activation ARs at 2x their
+# v5e wire size — corrected here (the genuinely-f32 ARs, e.g. loss
+# scalars and f32 gradient reductions, are second-order at these scales;
+# the correction is documented in EXPERIMENTS.md §Roofline).
+F32_AR_PROMOTION_CORRECTION = 0.5
+
+
+def collective_seconds(coll: dict) -> float:
+    t = 0.0
+    for kind, b in coll.items():
+        if kind.startswith("__"):
+            continue
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        if kind == "all-reduce":
+            factor *= F32_AR_PROMOTION_CORRECTION
+        t += factor * b / LINK_BW
+    return t
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    cfg = registry.get(arch_name)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens          # fwd(2) + bwd(4)
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    attn = 0.0
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        attn = (4.0 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+                * shape.seq_len * shape.global_batch)
+    return 2.0 * n_active * shape.global_batch + attn
+
+
+def analyze(mesh="single", with_hlo_mem=True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun",
+                                              f"{mesh}.*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or rec.get("variant",
+                                                "baseline") != "baseline":
+            continue
+        n_dev = rec["n_devices"]
+        t_comp = rec["hlo_dot_flops"] / PEAK_FLOPS
+        hlo_path = path.replace(".json", ".hlo")
+        if with_hlo_mem and os.path.exists(hlo_path):
+            mem_b = memory_bytes(open(hlo_path).read())
+        else:
+            mem_b = rec["cost_bytes"]
+        t_mem = mem_b / HBM_BW
+        t_coll = collective_seconds(rec["collective_bytes"])
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_global = rec["hlo_dot_flops"] * n_dev
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "roofline_frac": (max(t_comp, mf / n_dev / PEAK_FLOPS)
+                              / max(sum(terms.values()), 1e-12)),
+            "hbm_bytes_per_dev": mem_b,
+            "collective_bytes": {k: v for k, v in
+                                 rec["collective_bytes"].items()},
+            "temp_gib": rec["temp_bytes"] / 2 ** 30,
+            "args_gib": rec["arg_bytes"] / 2 ** 30,
+        })
+    return rows
+
+
+def markdown(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful/HLO | temp GiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['temp_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = analyze(args.mesh)
+    with open(os.path.join(RESULTS, f"roofline.{args.mesh}.json"),
+              "w") as f:
+        json.dump(rows, f, indent=1)
+    print(markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

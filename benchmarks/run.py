@@ -1,0 +1,263 @@
+"""Benchmark harness — one function per paper table/figure, plus
+beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
+(derived = the table's metric: ratio, GB/s, %, ...).
+
+  table3   special-value handling matrix (paper Table 3)
+  table4   REL ratio: library log/pow vs parity-safe approximations (Fig 1)
+  table56  REL codec throughput: original vs replaced fns (Fig 2, T5/T6)
+  table7   ABS throughput: protected vs unprotected (Fig 3)
+  table8   ABS ratio: protected vs unprotected (Fig 4)
+  table9   % values hitting the rounding-error fallback
+  ckpt     checkpoint codec ratio (beyond paper)
+  kv       KV-cache compression footprint + error (beyond paper)
+  gradwire cross-pod gradient wire bytes (beyond paper)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (QuantizerConfig, compression_ratio, decode_dense,
+                        encode_dense, roundtrip_dense, serialize)
+from repro.core.quantizer import (quantize_abs, quantize_abs_unprotected,
+                                  quantize_rel, quantize_rel_library)
+
+from . import datasets
+
+EB = 1e-3      # the paper's evaluation bound for Figs 1-4
+
+
+def _time(f, *args, repeats=5):
+    f(*args)                                    # compile/warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = f(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------- tables --
+
+def table3():
+    """Paper Table 3: which value classes are handled with the bound
+    guaranteed.  For LC(ours) every cell must be 'ok'."""
+    x = datasets.special_values()
+    for mode in ("abs", "rel"):
+        cfg = QuantizerConfig(mode=mode, error_bound=EB, bin_bits=32)
+        t0 = time.perf_counter()
+        y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+        us = (time.perf_counter() - t0) * 1e6
+        fin = np.isfinite(x)
+        if mode == "abs":
+            viol = np.sum(np.abs(x[fin].astype(np.float64) - y[fin]) > EB)
+        else:
+            m = fin & (x != 0)
+            viol = np.sum(np.abs((x[m].astype(np.float64) - y[m])
+                                 / x[m].astype(np.float64)) > EB)
+        exact = np.array_equal(x[~fin].view(np.uint32),
+                               y[~fin].view(np.uint32))
+        status = "ok" if viol == 0 and exact else f"VIOLATIONS={viol}"
+        _emit(f"table3.{mode}.normal+inf+nan+denormal", us, status)
+
+
+def _rel_est_ratio(x, outlier):
+    # bins+payload+sign cost model (matches the serializer layout)
+    n_out = float(jnp.sum(outlier))
+    bits = x.size * 16 + n_out * 32 + x.size
+    return x.size * 32 / bits
+
+
+def table4():
+    """Fig 1 / Table 4: REL compression ratio, parity-safe bit-trick
+    log2/pow2 vs the library functions.
+
+    Two comparisons are reported:
+      * freestep — the paper's setting (w = log2(1+eb) exactly): the
+        bit-trick's octave-slope error pushes border values to the
+        lossless fallback, reproducing the paper's ~5% loss;
+      * pow2step — OUR production codec: the pow2-floored step absorbs
+        that slope error entirely, so parity costs NO ratio vs the
+        library (a beyond-paper improvement; the <=1-bit finer step is
+        already included in both sides).
+    """
+    from .ablation import quantize_rel_freestep
+
+    cfg = QuantizerConfig(mode="rel", error_bound=EB, bin_bits=32)
+    fs_ratios, ps_ratios = [], []
+    for name, gen in datasets.SUITES.items():
+        x = gen()
+        xj = jnp.asarray(x)
+        t0 = time.perf_counter()
+        q_ours = quantize_rel(xj, cfg)
+        jax.block_until_ready(q_ours.bins)
+        us = (time.perf_counter() - t0) * 1e6
+        q_lib = quantize_rel_library(xj, cfg)
+        _, out_fs_trick = quantize_rel_freestep(xj, cfg, library=False)
+        _, out_fs_lib = quantize_rel_freestep(xj, cfg, library=True)
+
+        fs = (_rel_est_ratio(x, out_fs_trick)
+              / _rel_est_ratio(x, out_fs_lib))
+        ps = (_rel_est_ratio(x, q_ours.outlier)
+              / _rel_est_ratio(x, q_lib.outlier))
+        fs_ratios.append(fs)
+        ps_ratios.append(ps)
+        _emit(f"table4.{name}", us,
+              f"freestep_norm={fs:.4f} pow2step_norm={ps:.4f}")
+    _emit("table4.geomean.freestep", 0.0,
+          f"{np.exp(np.mean(np.log(fs_ratios))):.4f} (paper: ~0.948)")
+    _emit("table4.geomean.pow2step", 0.0,
+          f"{np.exp(np.mean(np.log(ps_ratios))):.4f} (ours: parity is free)")
+
+
+def table56():
+    """Fig 2 / Tables 5-6: REL throughput with replaced vs library fns
+    (paper: within +-1%).  GB/s of the jitted quantize on this CPU."""
+    cfg = QuantizerConfig(mode="rel", error_bound=EB, bin_bits=32)
+    f_ours = jax.jit(lambda v: quantize_rel(v, cfg).bins)
+    f_lib = jax.jit(lambda v: quantize_rel_library(v, cfg).bins)
+    for name in ("CESM", "HACC", "QMCPACK"):
+        x = jnp.asarray(datasets.SUITES[name]())
+        t_ours = _time(f_ours, x)
+        t_lib = _time(f_lib, x)
+        gbs = x.size * 4 / t_ours / 1e9
+        _emit(f"table56.compress.{name}", t_ours * 1e6,
+              f"{gbs:.2f}GB/s rel_to_lib={t_lib / t_ours:.3f}")
+
+
+def table7():
+    """Fig 3 / Table 7: ABS compression throughput, double-check protected
+    vs unprotected (paper: no significant change on memory-bound GPU; this
+    CPU is compute-bound so the checks cost ~10-15% — the TPU VPU roofline
+    argument is in EXPERIMENTS.md)."""
+    cfg = QuantizerConfig(mode="abs", error_bound=EB, bin_bits=32)
+    f_p = jax.jit(lambda v: quantize_abs(v, cfg).bins)
+    f_u = jax.jit(lambda v: quantize_abs_unprotected(v, cfg).bins)
+    for name in ("CESM", "EXAALT", "SCALE"):
+        x = jnp.asarray(datasets.SUITES[name]())
+        t_p, t_u = _time(f_p, x), _time(f_u, x)
+        _emit(f"table7.{name}", t_p * 1e6,
+              f"{x.size*4/t_p/1e9:.2f}GB/s protected/unprotected="
+              f"{t_u / t_p:.3f}")
+
+
+def table8():
+    """Fig 4 / Table 8: ABS ratio protected vs unprotected (paper: ~5%
+    lower with protection, EXAALT worst)."""
+    import zlib
+
+    # bin_bits=32: the suites span O(100) magnitudes, so eb=1e-3 needs
+    # ~18-bit bins — int16 would make everything a range outlier
+    cfg = QuantizerConfig(mode="abs", error_bound=EB, bin_bits=32)
+    rels = []
+    for name, gen in datasets.SUITES.items():
+        x = gen()
+        r_p = compression_ratio(x, cfg)
+        q = quantize_abs_unprotected(jnp.asarray(x), cfg)
+        n_out = float(jnp.sum(q.outlier))
+        bins32 = np.asarray(q.bins, np.int64).astype(np.int32).tobytes()
+        stream = zlib.compress(bins32, 6)
+        r_u = x.nbytes / (len(stream) + n_out * 4 + 24)
+        rels.append(r_p / r_u)
+        _emit(f"table8.{name}", 0.0,
+              f"protected={r_p:.2f}x unprotected={r_u:.2f}x "
+              f"norm={r_p / r_u:.4f}")
+    _emit("table8.geomean", 0.0,
+          f"{np.exp(np.mean(np.log(rels))):.4f} (paper: ~0.95)")
+
+
+def table9():
+    """Table 9: % of values whose rounding error forces the lossless
+    fallback (paper avg 0.00-3.41%, max 11.16%).
+
+    Production codec column is ~0% BY CONSTRUCTION: pow2 steps make the
+    quantization arithmetic exact, eliminating the paper's rounding-error
+    class entirely (the cost moved into <=1-bit-finer bins).  The REL
+    freestep column reproduces the paper's effect."""
+    from .ablation import quantize_rel_freestep
+
+    cfg = QuantizerConfig(mode="abs", error_bound=EB, bin_bits=32)
+    cfg_r = QuantizerConfig(mode="rel", error_bound=EB, bin_bits=32)
+    for name, gen in datasets.SUITES.items():
+        x = gen()
+        q = quantize_abs(jnp.asarray(x), cfg)
+        qu = quantize_abs_unprotected(jnp.asarray(x), cfg)
+        extra = float(jnp.sum(q.outlier)) - float(jnp.sum(qu.outlier))
+        _, fs_trick = quantize_rel_freestep(jnp.asarray(x), cfg_r, False)
+        _, fs_lib = quantize_rel_freestep(jnp.asarray(x), cfg_r, True)
+        fs = (float(jnp.sum(fs_trick)) - float(jnp.sum(fs_lib))) / x.size
+        _emit(f"table9.{name}", 0.0,
+              f"pow2step={100 * extra / x.size:.3f}% "
+              f"freestep_rel={100 * fs:.3f}%")
+
+
+# ------------------------------------------------------- beyond paper ----
+
+def ckpt():
+    """Checkpoint codec: LC-serialized f32 master weights vs raw."""
+    r = np.random.default_rng(0)
+    w = (r.standard_normal(1 << 21) * 0.02).astype(np.float32)
+    for eb in (1e-5, 1e-6, 1e-7):
+        cfg = QuantizerConfig(mode="abs", error_bound=eb)
+        t0 = time.perf_counter()
+        stream = serialize(w, cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        _emit(f"ckpt.eb{eb:g}", us, f"{w.nbytes / len(stream):.2f}x")
+
+
+def kv():
+    """KV-cache quantization: footprint + worst-page error vs bound."""
+    from repro.compression.kv import (dequantize_kv, kv_quantizer_config,
+                                      quantize_kv)
+    r = np.random.default_rng(1)
+    k = jnp.asarray(r.standard_normal((2, 4, 1024, 128)).astype(np.float32))
+    cfg = kv_quantizer_config()
+    t0 = time.perf_counter()
+    q = quantize_kv(k, cfg)
+    jax.block_until_ready(q.bins)
+    us = (time.perf_counter() - t0) * 1e6
+    comp = (q.bins.size + q.eb2.size * 4 + q.out_idx.size * 4
+            + q.out_val.size * 4 + q.overflow.size)
+    y = dequantize_kv(q)
+    err = float(jnp.max(jnp.abs(k - y)))
+    _emit("kv.int8+outliers", us,
+          f"{k.size * 4 / comp:.2f}x max_err={err:.4f}")
+
+
+def gradwire():
+    """Cross-pod gradient wire bytes: compressed vs f32 psum."""
+    from repro.compression.grads import GradCompressionConfig, wire_bytes
+    cfg = GradCompressionConfig()
+    n = 1 << 24
+    _emit("gradwire.int8+outliers", 0.0,
+          f"{n * 4 / wire_bytes(n, cfg):.2f}x less traffic")
+
+
+TABLES = {
+    "table3": table3, "table4": table4, "table56": table56,
+    "table7": table7, "table8": table8, "table9": table9,
+    "ckpt": ckpt, "kv": kv, "gradwire": gradwire,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    for n in names:
+        TABLES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""End-to-end training driver: a small LM trained for a few hundred steps
+with the full substrate — deterministic data pipeline, AdamW, fault-
+tolerant checkpointing (kill it anytime; rerun resumes exactly), straggler
+monitoring, and optional lossy (guaranteed-error-bounded) checkpoints.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--lossy-ckpt]
+    # kill it mid-run and run again: it resumes from the last checkpoint
+
+~100M-parameter preset: --d-model 512 --layers 12 (default is a fast
+~20M CPU-friendly config; same code path).
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import registry
+from repro.core import QuantizerConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import build
+from repro.optim import optimizer as opt
+from repro.runtime.train_loop import TrainLoopConfig, run, StragglerMonitor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-e2e-ckpt")
+    ap.add_argument("--lossy-ckpt", action="store_true")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        registry.get("internlm2-20b").reduced(),
+        d_model=args.d_model, n_layers=args.layers,
+        d_ff=args.d_model * 3, vocab=8192, n_heads=8, n_kv_heads=4,
+        head_dim=args.d_model // 8)
+    bundle = build(cfg)
+    print(f"model: {bundle.n_params()/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    opt_cfg = opt.AdamWConfig(lr=1e-3, warmup_steps=20,
+                              total_steps=args.steps)
+    pipe = TokenPipeline(DataConfig(cfg.vocab, args.seq, args.batch))
+    lossy = (QuantizerConfig(mode="abs", error_bound=1e-6)
+             if args.lossy_ckpt else None)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2, lossy=lossy)
+
+    def init():
+        params = bundle.init(jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params, opt_cfg)}
+
+    template = jax.eval_shape(init)
+    state, start = ckpt.restore(template)
+    if state is None:
+        state, start = init(), 0
+        print("fresh start")
+    else:
+        state = jax.tree.map(jnp.asarray, state)
+        print(f"resumed from step {start}")
+
+    @jax.jit
+    def step_fn(state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(state["params"], batch)
+        params, ostate, m = opt.apply(state["params"], grads, state["opt"],
+                                      opt_cfg)
+        m["loss"] = loss
+        return {"params": params, "opt": ostate}, m
+
+    losses = []
+
+    def on_metrics(step, m, dt, straggle):
+        losses.append(float(m["loss"]))
+        flag = "  STRAGGLER" if straggle else ""
+        print(f"step {step:4d} loss={float(m['loss']):.4f} "
+              f"gnorm={float(m['grad_norm']):.2f} {dt*1e3:6.0f}ms{flag}")
+
+    batch_fn = lambda i: jax.tree.map(jnp.asarray, pipe.batch(i))
+    loop_cfg = TrainLoopConfig(total_steps=args.steps, checkpoint_every=50,
+                               log_every=10)
+    t0 = time.time()
+    state, last, interrupted = run(step_fn, state, batch_fn, ckpt, loop_cfg,
+                                   start_step=start,
+                                   on_metrics=on_metrics)
+    print(f"\n{'interrupted' if interrupted else 'finished'} at step {last} "
+          f"({time.time()-t0:.0f}s); loss {losses[0] if losses else 0:.3f} "
+          f"-> {losses[-1] if losses else 0:.3f}")
+    assert interrupted or len(losses) < 2 or losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Distributed compression services built on repro.core (gradients, KV
+cache, checkpoints, activations) — where the paper's guaranteed error bound
+becomes a systems property."""

@@ -1,0 +1,28 @@
+"""repro.core — guaranteed-error-bound lossy quantizers (the paper's
+contribution), as a composable JAX module.
+
+Public API:
+    QuantizerConfig             — mode ('abs'|'rel'|'noa'), error bound, widths
+    quantize / Quantized        — bins + outlier flags + recon (jit-safe)
+    encode_dense/decode_dense   — fixed-shape codec, outliers stored densely
+    encode_compact/decode_compact — capped compact outliers (wire format)
+    serialize/deserialize       — host byte stream (LC-style inline outliers)
+    log2approx/pow2approx       — parity-safe transcendental replacements
+"""
+from .bitops import bits_to_float, float_to_bits, log2approx, pow2approx
+from .codec import (EncodedCompact, EncodedDense, decode_compact, decode_dense,
+                    encode_compact, encode_dense, roundtrip_dense)
+from .config import QuantizerConfig
+from .quantizer import (Quantized, dequantize_abs, dequantize_rel, quantize,
+                        quantize_abs, quantize_abs_unprotected, quantize_noa,
+                        quantize_rel, quantize_rel_library)
+from .serializer import compression_ratio, deserialize, serialize
+
+__all__ = [
+    "QuantizerConfig", "Quantized", "quantize", "quantize_abs", "quantize_rel",
+    "quantize_noa", "quantize_abs_unprotected", "quantize_rel_library",
+    "dequantize_abs", "dequantize_rel", "encode_dense", "decode_dense",
+    "encode_compact", "decode_compact", "roundtrip_dense", "EncodedDense",
+    "EncodedCompact", "serialize", "deserialize", "compression_ratio",
+    "log2approx", "pow2approx", "float_to_bits", "bits_to_float",
+]

@@ -1,0 +1,102 @@
+"""Parity-safe transcendental replacements (paper §3.2, ported 1:1 to JAX).
+
+The paper's REL quantizer needs log2()/pow2(), but library transcendentals
+differ between backends (the paper observed log() returning 88.5 on GPU vs
+88.4999... on CPU; XLA has the same hazard: Eigen polynomials on CPU vs
+hardware lookup tables on TPU).  These replacements use ONLY bitcasts,
+integer ops, and IEEE-754 add/sub — every XLA backend produces identical
+bits, which is what guarantees CPU/TPU compression parity.
+
+They are *approximations* (log2(1+m) ~= m); inaccuracy is harmless because
+the quantizer double-checks every value and falls back to lossless storage
+(paper §3.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# dtype -> (int dtype, mantissa bits, exponent mask, exponent bias)
+_FP_SPEC = {
+    jnp.dtype(jnp.float32): (jnp.int32, 23, 0xFF, 127),
+    jnp.dtype(jnp.float64): (jnp.int64, 52, 0x7FF, 1023),
+}
+
+
+def fp_spec(dtype):
+    try:
+        return _FP_SPEC[jnp.dtype(dtype)]
+    except KeyError:
+        raise TypeError(f"unsupported float dtype for bit-level quantizer: {dtype}")
+
+
+# --- FMA / contraction hazard and why steps are powers of two -------------
+#
+# The paper disables FMA with compiler flags (-mno-fma / -fmad=false).  XLA
+# has no such knob: we measured (tests/test_parity.py::test_fma_contraction
+# _documented) that LLVM contracts mul+add at INSTRUCTION level underneath
+# XLA, and even `lax.optimization_barrier` does not stop it — the
+# double-check accepted values whose decoder-side reconstruction violated
+# the bound, and jit vs eager produced different pow2approx bits.
+#
+# Our fix is stronger than a flag: make contraction mathematically
+# irrelevant.  Every quantization step (ABS eb2, REL log_step) is a POWER
+# OF TWO, so `bin * step` is an exact exponent shift (error-free for
+# |bin| < 2^mantissa_bits).  fma(a,b,c) == fadd(fmul(a,b),c) whenever a*b
+# is exact, so any contraction decision by any compiler yields identical
+# bits.  The remaining single adds/subs (lone fadd/fsub/fcmp) are
+# individually IEEE-deterministic and cannot be contracted further.
+# Cost: the step can be up to 2x finer than requested -> <= 1 extra
+# bit/value before the lossless stage (measured in benchmarks/).
+
+
+def pow2_floor(x: jnp.ndarray) -> jnp.ndarray:
+    """Largest power of two <= x (x positive, finite, normal) — computed by
+    clearing the mantissa bits, so it is deterministic integer work.  Used
+    to derive the effective quantization step from a traced per-tensor eb
+    on-device."""
+    int_t, mb, _, _ = fp_spec(x.dtype)
+    bits = lax.bitcast_convert_type(x, int_t)
+    return lax.bitcast_convert_type(bits & ~((1 << mb) - 1), x.dtype)
+
+
+def log2approx(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper's log2approxf: exponent + (1.mantissa), exact on powers of two.
+
+    Monotonic piecewise-linear approximation of log2|x|; max error ~0.086.
+    Callers pass |x|; sign/zero/denormal cases are the quantizer's job.
+    """
+    int_t, mb, emask, bias = fp_spec(x.dtype)
+    orig_i = lax.bitcast_convert_type(x, int_t)            # extract bit pattern
+    expo = (orig_i >> mb) & emask                          # isolate exponent
+    frac_i = (bias << mb) | (orig_i & ((1 << mb) - 1))     # isolate fraction
+    frac_f = lax.bitcast_convert_type(frac_i.astype(int_t), x.dtype)
+    return frac_f + (expo - (bias + 1)).astype(x.dtype)    # add de-biased exponent
+
+
+def pow2approx(log_f: jnp.ndarray) -> jnp.ndarray:
+    """Paper's pow2approxf: exact inverse of log2approx on its own range.
+
+    Bit-determinism contract: log_f must be an EXACT product (bin * pow2
+    step — see the module note).  Then `log_f + bias` is immune to FMA
+    contraction, and `biased - (expo-1)` is exact by Sterbenz, so every
+    backend produces identical bits.
+    """
+    int_t, mb, _, bias = fp_spec(log_f.dtype)
+    biased = log_f + bias                                  # re-bias exponent
+    expo = biased.astype(int_t)                            # C-cast: trunc toward zero
+    frac_f = biased - (expo - 1).astype(log_f.dtype)       # recreate fraction in [1,2)
+    frac_i = lax.bitcast_convert_type(frac_f, int_t)       # extract fraction
+    exp_i = (expo << mb) | (frac_i & ((1 << mb) - 1))      # combine exp & frac
+    return lax.bitcast_convert_type(exp_i, log_f.dtype)
+
+
+def float_to_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact payload for the lossless outlier channel (preserves NaN
+    payloads, -0.0, infinities)."""
+    int_t, _, _, _ = fp_spec(x.dtype)
+    return lax.bitcast_convert_type(x, int_t)
+
+
+def bits_to_float(bits: jnp.ndarray, dtype) -> jnp.ndarray:
+    return lax.bitcast_convert_type(bits, dtype)

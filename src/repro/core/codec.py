@@ -1,0 +1,129 @@
+"""jit-safe fixed-shape codec over the quantizers.
+
+XLA needs static shapes, so the in-flight representation differs from the
+host byte stream (serializer.py) while preserving the paper's semantics:
+outliers live WITH the bins (same index space — LC's inline placement, not
+SZ3's side list), stored bit-exactly so NaN payloads / -0.0 / INF survive.
+
+Two layouts:
+
+  * DENSE  — bins + outlier payload at every index (payload 0 where not
+    outlier).  Reference layout; wire-size = bins + full payload, used where
+    simplicity beats size (activation offload, tests).
+  * COMPACT — bins + (idx, payload) arrays capped at K = ceil(frac * n).
+    This is what goes over the pod axis for gradient compression.  If the
+    outlier count exceeds K the tensor CANNOT be represented within the
+    bound — encode reports `overflow` and callers must take the lossless
+    path (compression/grads.py does this with a psum-agreed lax.cond).  The
+    guarantee is never silently dropped.
+
+Bin storage width is cfg.bin_bits; bins are produced as int32 and narrowed
+here (safe: the quantizer's range check already confined them to
+(-maxbin, maxbin)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantizer as q
+from .bitops import bits_to_float, float_to_bits
+from .config import QuantizerConfig
+
+_BIN_DTYPE = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+
+
+class EncodedDense(NamedTuple):
+    bins: jnp.ndarray        # int{8,16,32}[n]
+    outlier: jnp.ndarray     # bool[n]
+    payload: jnp.ndarray     # uint-bits[n], original bits where outlier
+    sign: jnp.ndarray | None  # bool[n] (REL only)
+    eb: jnp.ndarray | None   # traced scalar bound (NOA / per-tensor eb)
+
+
+class EncodedCompact(NamedTuple):
+    bins: jnp.ndarray        # int{8,16,32}[n]
+    out_idx: jnp.ndarray     # int32[K], n = "empty slot"
+    out_payload: jnp.ndarray  # uint-bits[K]
+    n_outliers: jnp.ndarray  # int32 scalar
+    overflow: jnp.ndarray    # bool scalar: n_outliers > K (bound NOT met)
+    sign: jnp.ndarray | None
+    eb: jnp.ndarray | None
+
+    def wire_bits(self, cfg: QuantizerConfig) -> int:
+        """Static wire size in bits (what the collective actually moves)."""
+        n = self.bins.shape[0]
+        k = self.out_idx.shape[0]
+        elem = np.dtype(str(self.out_payload.dtype)).itemsize * 8
+        sign_bits = n if self.sign is not None else 0
+        return n * cfg.bin_bits + k * (32 + elem) + sign_bits + 64
+
+
+def _narrow(bins: jnp.ndarray, cfg: QuantizerConfig) -> jnp.ndarray:
+    return bins.astype(_BIN_DTYPE[cfg.bin_bits])
+
+
+def encode_dense(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> EncodedDense:
+    flat = x.reshape(-1)
+    if cfg.mode == "abs":
+        qt = q.quantize_abs(flat, cfg, eb=eb)
+    elif cfg.mode == "rel":
+        qt = q.quantize_rel(flat, cfg)
+    else:  # noa
+        qt, eb = q.quantize_noa(flat, cfg)
+    payload = jnp.where(qt.outlier, float_to_bits(flat), 0)
+    return EncodedDense(_narrow(qt.bins, cfg), qt.outlier, payload, qt.sign,
+                        None if eb is None else jnp.asarray(eb, flat.dtype))
+
+
+def decode_dense(enc: EncodedDense, cfg: QuantizerConfig, shape=None):
+    bins = enc.bins.astype(jnp.int32)
+    if cfg.mode == "rel":
+        recon = q.dequantize_rel(bins, enc.sign, cfg)
+    else:
+        recon = q.dequantize_abs(bins, cfg, eb=enc.eb)
+    vals = jnp.where(enc.outlier, bits_to_float(enc.payload, recon.dtype), recon)
+    return vals.reshape(shape) if shape is not None else vals
+
+
+def encode_compact(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> EncodedCompact:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = cfg.outlier_cap(n)
+    if cfg.mode == "abs":
+        qt = q.quantize_abs(flat, cfg, eb=eb)
+    elif cfg.mode == "rel":
+        qt = q.quantize_rel(flat, cfg)
+    else:
+        qt, eb = q.quantize_noa(flat, cfg)
+    n_out = jnp.sum(qt.outlier).astype(jnp.int32)
+    # Static-size gather of outlier positions; fill value n marks empties.
+    (idx,) = jnp.nonzero(qt.outlier, size=k, fill_value=n)
+    safe_idx = jnp.minimum(idx, n - 1)
+    payload = jnp.where(idx < n, float_to_bits(flat)[safe_idx], 0)
+    return EncodedCompact(_narrow(qt.bins, cfg), idx.astype(jnp.int32), payload,
+                          n_out, n_out > k, qt.sign,
+                          None if eb is None else jnp.asarray(eb, flat.dtype))
+
+
+def decode_compact(enc: EncodedCompact, cfg: QuantizerConfig, shape=None,
+                   dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    bins = enc.bins.astype(jnp.int32)
+    if cfg.mode == "rel":
+        recon = q.dequantize_rel(bins, enc.sign, cfg, dtype=dt)
+    else:
+        recon = q.dequantize_abs(bins, cfg, eb=enc.eb, dtype=dt)
+    n = recon.shape[0]
+    vals = bits_to_float(enc.out_payload, dt)
+    # Scatter exact outliers back over their reconstructions; empty slots
+    # (idx == n) drop out of bounds and are discarded by mode='drop'.
+    recon = recon.at[enc.out_idx].set(vals, mode="drop")
+    return recon.reshape(shape) if shape is not None else recon
+
+
+def roundtrip_dense(x: jnp.ndarray, cfg: QuantizerConfig):
+    """Encode+decode; the decoded result carries the full guarantee."""
+    return decode_dense(encode_dense(x, cfg), cfg, shape=x.shape)

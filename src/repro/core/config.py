@@ -1,0 +1,146 @@
+"""Quantizer configuration and host-side derived constants.
+
+All data-independent constants (eb2, 1/eb2, the REL log-step) are computed
+ONCE on the host in double precision and then frozen to the target dtype.
+Devices never evaluate a transcendental to derive them — a second parity
+hazard the paper's framework avoids by baking constants into the compressed
+header.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+Mode = str  # 'abs' | 'rel' | 'noa'
+
+# Acceptance tightening (see quantizer.py): the double-check comparison is
+# itself floating point.  Accepting only diff <= eb * TIGHTEN guarantees the
+# TRUE error is <= eb even after the check's own rounding (a few ulps).  The
+# margin is ~1e-6 relative for f32 — immeasurable in compression ratio.
+TIGHTEN_F32 = 1.0 - 2.0 ** -18
+TIGHTEN_F64 = 1.0 - 2.0 ** -40
+
+# Denormal-flush hardening.  XLA backends (CPU and TPU) run with FTZ/DAZ:
+# arithmetic that produces or consumes denormals flushes to zero, while
+# numpy keeps IEEE gradual underflow.  Measured in this repo (see
+# tests/test_parity.py::test_ftz_semantics_documented): under jit,
+# 1e-20 * 1e-20 == 0.0.  Unguarded, the double-check can flush BOTH sides
+# of `|x-r| <= eb*|x|` to zero and wrongly accept — the paper's §2.2
+# denormal lesson reappearing one layer down.  Guards:
+#   * ABS: eb must be >= EB_FLOOR so every denormal quantizes to bin 0
+#     with true error < tiny <= eb under BOTH semantics (sound + parity).
+#   * REL: magnitudes below rel_screen_threshold() are outliers, decided by
+#     comparisons only (comparisons give identical answers under FTZ and
+#     gradual underflow because the threshold is a normal number).
+EB_FLOOR_F32 = 2.0 ** -120
+EB_FLOOR_F64 = 2.0 ** -1000
+
+
+def _pow2_floor_np(x):
+    """Largest power of two <= x, by clearing mantissa bits (host mirror of
+    bitops.pow2_floor)."""
+    dt = x.dtype
+    if dt == np.float32:
+        bits = np.float32(x).view(np.uint32)
+        return (bits & np.uint32(0xFF800000)).view(np.float32)
+    bits = np.float64(x).view(np.uint64)
+    return (bits & np.uint64(0xFFF0000000000000)).view(np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerConfig:
+    """User-facing knobs for one LC-style guaranteed-error-bound quantizer."""
+
+    mode: Mode = "abs"            # 'abs' | 'rel' | 'noa'
+    error_bound: float = 1e-3     # eb (for 'noa': relative to value range R)
+    bin_bits: int = 16            # storage width of bin numbers (sign incl.)
+    dtype: str = "float32"        # data dtype: 'float32' | 'float64'
+    outlier_cap_frac: float = 0.125  # compact codec: max outliers fraction
+                                     # (paper Table 9 max observed: 11.16%)
+
+    def __post_init__(self):
+        if self.mode not in ("abs", "rel", "noa"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if not (self.error_bound > 0.0) or not math.isfinite(self.error_bound):
+            raise ValueError("error_bound must be finite and positive")
+        if self.bin_bits not in (8, 16, 32):
+            raise ValueError("bin_bits must be 8, 16 or 32")
+        if self.mode == "abs" and self.error_bound < self.eb_floor:
+            raise ValueError(
+                f"abs error_bound {self.error_bound} below the denormal-safe "
+                f"floor {self.eb_floor} for {self.dtype} (see EB_FLOOR_* note)")
+
+    @property
+    def eb_floor(self) -> float:
+        return EB_FLOOR_F64 if self.dtype == "float64" else EB_FLOOR_F32
+
+    def rel_screen_threshold(self):
+        """Smallest |x| the REL quantizer will bin; below it -> outlier.
+
+        2 * max(tiny, tiny/eb), rounded UP: keeps every product in the
+        double-check (`eb*T*|x|`) and every sub (`x - recon`) in the normal
+        range, so FTZ backends and gradual-underflow backends make the SAME
+        accept/reject decision and the bound is sound under both.
+        """
+        dt = self.np_dtype
+        tiny = float(np.finfo(dt).tiny)
+        thr = 2.0 * max(tiny, tiny / self.error_bound)
+        return np.nextafter(dt.type(thr), dt.type(np.inf))
+
+    @property
+    def np_dtype(self):
+        return np.dtype(self.dtype)
+
+    @property
+    def tighten(self) -> float:
+        return TIGHTEN_F64 if self.np_dtype == np.float64 else TIGHTEN_F32
+
+    @property
+    def maxbin(self) -> int:
+        # Valid bins are (-maxbin, maxbin); |bin| >= maxbin is an outlier.
+        # This keeps +maxbin free as the serializer's inline escape code and
+        # keeps the two's-complement minimum (paper §2.4) out of the stream.
+        return (1 << (self.bin_bits - 1)) - 1
+
+    # --- host-side derived constants (exact target-dtype bits) -------------
+
+    def abs_constants(self, eb: float | None = None):
+        """(eb, eb2, inv_eb2) as numpy scalars of the data dtype.
+
+        eb2 — the bin width — is floored to a POWER OF TWO so that
+        bin * eb2 and x * inv_eb2 are exact exponent shifts; this makes the
+        codec immune to FMA contraction on any backend (see bitops module
+        note).  The acceptance check still uses the user's original eb, so
+        the guarantee is against the REQUESTED bound.
+        """
+        dt = self.np_dtype
+        eb_ = dt.type(self.error_bound if eb is None else eb)
+        eb2 = _pow2_floor_np(dt.type(2.0) * eb_)
+        inv_eb2 = dt.type(1.0) / eb2
+        return eb_, eb2, inv_eb2
+
+    def rel_constants(self):
+        """(eb, log_step, inv_log_step) for the REL quantizer.
+
+        log_step w is the bin width in the log2approx domain.  log2approx is
+        piecewise linear per octave, so a bin-center reconstruction has
+        relative error <= ~w/2; w = log2(1+eb) ~= 1.44*eb keeps that under
+        ~0.72*eb with margin for the approximation's octave-boundary slope
+        changes.  Anything that still lands outside eb is discarded by the
+        double-check and stored losslessly.
+
+        w is floored to a POWER OF TWO (FMA-contraction immunity — bitops
+        module note); the ratio cost of the finer step is bounded by one
+        bit per value before the lossless stage.
+        """
+        dt = self.np_dtype
+        eb_ = dt.type(self.error_bound)
+        step = math.log2(1.0 + self.error_bound)  # exact-ish host double
+        log_step = _pow2_floor_np(dt.type(step))
+        inv_log_step = dt.type(1.0) / log_step
+        return eb_, log_step, inv_log_step
+
+    def outlier_cap(self, n: int) -> int:
+        return max(1, int(math.ceil(n * self.outlier_cap_frac)))

@@ -1,0 +1,263 @@
+"""Guaranteed-error-bound quantizers (the paper's core contribution).
+
+Implements the LC framework's ABS / REL / NOA quantizers with every
+correctness mechanism from the paper:
+
+  * double-checking (§3.1): every value is immediately reconstructed and
+    verified against the bound; failures are flagged as outliers and kept
+    losslessly (bit-exact, inline with the bin stream — NOT a separate
+    SZ3-style list).
+  * parity-safe REL transcendentals (§3.2): bit-manipulation log2/pow2 from
+    `bitops`, IEEE-only ops, identical bits on every XLA backend.
+  * special values (§2.2): NaN/INF are explicitly flagged; denormals are
+    treated like normal values (ABS) and fall out via the double-check (REL).
+  * two's-complement edge case (§2.4/§3.3): the bin-range test is the
+    paper's two-comparison form `(bin >= maxbin) | (bin <= -maxbin)`,
+    never `abs(bin) >= maxbin`.
+
+Soundness note on the check itself: the comparison `|x - recon| <= eb` is
+computed in floating point, so a true error a hair above eb could round to
+"equal".  We therefore accept only `diff <= eb * TIGHTEN` with TIGHTEN
+covering the few-ulp rounding of the check expression (config.TIGHTEN_*).
+The guarantee is then unconditional: every decoded value is within eb of
+the original, or (outliers / specials) bit-for-bit identical to it.
+
+All functions are shape-polymorphic, jit-safe, and use only deterministic
+IEEE + integer ops — the TPU analogue of the paper's `-mno-fma`+IEEE-only
+discipline (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bitops import float_to_bits, log2approx, pow2_floor, pow2approx
+from .config import QuantizerConfig
+
+
+class Quantized(NamedTuple):
+    """Result of quantization, before outlier storage is chosen.
+
+    bins:     int32 bin numbers (0 where outlier)
+    outlier:  bool mask — value must be stored losslessly
+    recon:    the reconstruction the decoder will produce for non-outliers
+              (returned so callers can form residuals without re-decoding)
+    sign:     REL only — True where the original value is negative.  REL
+              bins encode log2|x| and are signed themselves (|x| < 1 has a
+              negative bin), so the value's sign needs its own plane; the
+              serializer packs it at 1 bit/value.
+    """
+
+    bins: jnp.ndarray
+    outlier: jnp.ndarray
+    recon: jnp.ndarray
+    sign: jnp.ndarray | None = None
+
+
+def _finite(x):
+    # isfinite == explicit INF and NaN check (paper handles both explicitly;
+    # for ABS the INF rejection is implicit via the failed double-check, but
+    # on XLA float->int conversion of non-finite values is undefined, so we
+    # must flag them BEFORE the int cast).
+    return jnp.isfinite(x)
+
+
+def quantize_abs(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> Quantized:
+    """ABS quantizer: bin = rint(x / (2*eb)), recon = bin * (2*eb).
+
+    `eb` overrides the config bound (used by NOA and by per-tensor
+    gradient/KV compression, where eb is a traced scalar); constants are
+    computed in the data dtype either way so encode and decode agree
+    bit-for-bit.
+    """
+    dt = x.dtype
+    degenerate = None
+    if eb is None:
+        eb_, eb2, inv_eb2 = cfg.abs_constants()   # config enforces eb floor
+    else:
+        # Traced per-tensor eb (NOA, gradient/KV compression): guard the
+        # denormal-flush hazard dynamically — an eb below the floor cannot
+        # be checked reliably under FTZ, so the whole tensor goes lossless.
+        # eb2 is pow2-floored on-device (integer bit op) for FMA immunity,
+        # exactly as the host does for static bounds.
+        floor = jnp.asarray(cfg.eb_floor, dt)
+        eb_ = jnp.asarray(eb, dt)
+        degenerate = ~(eb_ >= floor)              # True also for NaN eb
+        eb_ = jnp.maximum(eb_, floor)
+        eb2 = pow2_floor(jnp.asarray(2.0, dt) * eb_)
+        inv_eb2 = jnp.asarray(1.0, dt) / eb2
+    maxbin = cfg.maxbin
+
+    finite = _finite(x)
+    xs = jnp.where(finite, x, jnp.zeros((), dt))           # keep int cast defined
+    bin_f = jnp.rint(xs * inv_eb2)                         # round to nearest bin
+    # Range check in FLOAT domain first: |bin_f| can exceed int32 (an
+    # implementation-defined cast on XLA), so clamp via the outlier flag
+    # before converting.
+    range_bad = jnp.abs(bin_f) >= jnp.asarray(float(maxbin), dt)
+    bin_i = jnp.where(range_bad, jnp.zeros_like(bin_f), bin_f).astype(jnp.int32)
+    # Paper §3.3: two-comparison form — NEVER abs(bin) (two's-complement min
+    # has no positive counterpart; jnp.abs would silently wrap).
+    range_bad_i = (bin_i >= maxbin) | (bin_i <= -maxbin)
+
+    # bin * eb2 is EXACT (pow2 step) -> identical under any FMA contraction;
+    # this is our substitute for the paper's -mno-fma (see bitops note).
+    recon = bin_i.astype(dt) * eb2                         # decoder's exact expr
+    diff = jnp.abs(x - recon)
+    bound = eb_ * jnp.asarray(cfg.tighten, dt)
+    fails_check = ~(diff <= bound)                         # True for NaN diff too
+
+    outlier = (~finite) | range_bad | range_bad_i | fails_check
+    if degenerate is not None:
+        outlier = outlier | degenerate
+    bins = jnp.where(outlier, 0, bin_i)
+    recon = jnp.where(outlier, jnp.zeros((), dt), recon)
+    return Quantized(bins, outlier, recon)
+
+
+def dequantize_abs(bins: jnp.ndarray, cfg: QuantizerConfig, eb=None, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    if eb is None:
+        _, eb2, _ = cfg.abs_constants()
+    else:
+        # mirror the encoder's traced-eb transform exactly
+        floor = jnp.asarray(cfg.eb_floor, dt)
+        eb_ = jnp.maximum(jnp.asarray(eb, dt), floor)
+        eb2 = pow2_floor(jnp.asarray(2.0, dt) * eb_)
+    return bins.astype(dt) * eb2
+
+
+def quantize_rel(x: jnp.ndarray, cfg: QuantizerConfig) -> Quantized:
+    """REL quantizer: bins in the (approximate) log2 domain.
+
+    bin = rint(log2approx(|x|) / w), recon = sign(x) * pow2approx(bin * w),
+    w = log2(1+eb).  log2approx/pow2approx are the paper's parity-safe
+    bit-manipulation replacements; their inaccuracy (and the denormal range,
+    where the bit trick reads a wrong exponent) is caught by the
+    double-check below and routed to lossless storage.
+    """
+    dt = x.dtype
+    eb_, log_step, inv_log_step = cfg.rel_constants()
+    maxbin = cfg.maxbin
+
+    finite = _finite(x)
+    ax = jnp.abs(x)
+    # Zeros, denormals, and near-denormal normals (where the double-check's
+    # own products would flush under FTZ backends) are screened out by a
+    # single comparison against a normal-range threshold — identical
+    # decision under FTZ and gradual underflow (config.rel_screen_threshold).
+    # This is the paper's "even denormals may require special handling for
+    # REL" (§2.2) made flush-proof.
+    too_small = ~(ax >= jnp.asarray(cfg.rel_screen_threshold(), dt))
+    safe = jnp.where(finite & ~too_small, ax, jnp.ones((), dt))
+    lg = log2approx(safe)
+    bin_f = jnp.rint(lg * inv_log_step)
+    range_bad = jnp.abs(bin_f) >= jnp.asarray(float(maxbin), dt)
+    bin_i = jnp.where(range_bad, jnp.zeros_like(bin_f), bin_f).astype(jnp.int32)
+    range_bad_i = (bin_i >= maxbin) | (bin_i <= -maxbin)   # paper §3.3 form
+
+    # Sign from the BIT PATTERN, not `x < 0`: DAZ backends read a negative
+    # denormal as -0.0 and would flip the comparison vs gradual-underflow
+    # backends.  The integer test is flush-proof and parity-exact.
+    neg = float_to_bits(x) < 0
+    mag = pow2approx(bin_i.astype(dt) * log_step)          # exact pow2-step mul
+    recon = jnp.where(neg, -mag, mag)
+    # Double-check in the REL metric: |x - r| <= eb * |x| (tightened), and
+    # the sign must match (paper §2.1.2).  INF/NaN fail here.  The
+    # reconstruction must itself be a normal number, else the decoder-side
+    # sub could flush (comparison vs tiny: flush-consistent either way).
+    ebT = jnp.asarray(dt.type(eb_) * dt.type(cfg.tighten), dt)
+    diff = jnp.abs(x - recon)
+    ok = (diff <= ebT * ax) & jnp.isfinite(recon)
+    ok &= mag >= jnp.asarray(np.finfo(dt).tiny, dt)
+    outlier = (~finite) | too_small | range_bad | range_bad_i | ~ok
+    bins = jnp.where(outlier, 0, bin_i)
+    recon = jnp.where(outlier, jnp.zeros((), dt), recon)
+    return Quantized(bins, outlier, recon, sign=neg)
+
+
+def dequantize_rel(bins: jnp.ndarray, sign: jnp.ndarray, cfg: QuantizerConfig,
+                   dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    _, log_step, _ = cfg.rel_constants()
+    mag = pow2approx(bins.astype(dt) * jnp.asarray(log_step, dt))
+    return jnp.where(sign, -mag, mag)
+
+
+def quantize_noa(x: jnp.ndarray, cfg: QuantizerConfig, value_range=None) -> Quantized:
+    """NOA = ABS with eb scaled by the value range R = max - min (paper
+    §2.1.3).  R is data-dependent, so eb becomes a traced scalar; it must be
+    carried in the encoded header for the decoder."""
+    if value_range is None:
+        finite = jnp.isfinite(x)
+        big = jnp.asarray(np.finfo(x.dtype).max, x.dtype)
+        hi = jnp.max(jnp.where(finite, x, -big))
+        lo = jnp.min(jnp.where(finite, x, big))
+        value_range = hi - lo
+    eb = jnp.asarray(cfg.error_bound, x.dtype) * value_range
+    # Degenerate inputs (R == 0, or eb*R below the denormal-safe floor) are
+    # handled inside quantize_abs's traced-eb path: the whole tensor goes
+    # lossless rather than risking a flush-corrupted check.
+    q = quantize_abs(x, cfg, eb=eb)
+    return q, eb
+
+
+def quantize(x: jnp.ndarray, cfg: QuantizerConfig):
+    """Mode dispatch. Returns (Quantized, eb_scalar_or_None)."""
+    if cfg.mode == "abs":
+        return quantize_abs(x, cfg), None
+    if cfg.mode == "rel":
+        return quantize_rel(x, cfg), None
+    if cfg.mode == "noa":
+        return quantize_noa(x, cfg)
+    raise ValueError(cfg.mode)
+
+
+# ---------------------------------------------------------------------------
+# Unprotected variants (paper's ablation baseline: Figs 3-4 / Tables 7-8).
+# Identical math WITHOUT the double-check — used only by benchmarks to
+# reproduce the paper's "protected vs unprotected" comparison.  These can
+# and do violate the error bound on adversarial values.
+# ---------------------------------------------------------------------------
+
+def quantize_abs_unprotected(x: jnp.ndarray, cfg: QuantizerConfig) -> Quantized:
+    dt = x.dtype
+    _, eb2, inv_eb2 = cfg.abs_constants()
+    maxbin = cfg.maxbin
+    finite = _finite(x)
+    xs = jnp.where(finite, x, jnp.zeros((), dt))
+    bin_f = jnp.rint(xs * inv_eb2)
+    range_bad = jnp.abs(bin_f) >= jnp.asarray(float(maxbin), dt)
+    bin_i = jnp.where(range_bad, jnp.zeros_like(bin_f), bin_f).astype(jnp.int32)
+    outlier = (~finite) | range_bad          # only range/special screening
+    bins = jnp.where(outlier, 0, bin_i)
+    return Quantized(bins, outlier, bins.astype(dt) * eb2)
+
+
+def quantize_rel_library(x: jnp.ndarray, cfg: QuantizerConfig) -> Quantized:
+    """REL using the BACKEND's log2/exp2 (the paper's 'original functions'
+    baseline): higher accuracy -> better ratio, but NO cross-device parity."""
+    dt = x.dtype
+    eb_, log_step, inv_log_step = cfg.rel_constants()
+    maxbin = cfg.maxbin
+    finite = _finite(x)
+    ax = jnp.abs(x)
+    too_small = ~(ax >= jnp.asarray(cfg.rel_screen_threshold(), dt))
+    safe = jnp.where(finite & ~too_small, ax, jnp.ones((), dt))
+    lg = jnp.log2(safe)                                    # library call
+    bin_f = jnp.rint(lg * inv_log_step)
+    range_bad = jnp.abs(bin_f) >= jnp.asarray(float(maxbin), dt)
+    bin_i = jnp.where(range_bad, jnp.zeros_like(bin_f), bin_f).astype(jnp.int32)
+    mag = jnp.exp2(bin_i.astype(dt) * log_step)            # library call
+    neg = float_to_bits(x) < 0
+    recon = jnp.where(neg, -mag, mag)
+    ebT = jnp.asarray(dt.type(eb_) * dt.type(cfg.tighten), dt)
+    diff = jnp.abs(x - recon)
+    ok = (diff <= ebT * ax) & jnp.isfinite(recon)
+    ok &= mag >= jnp.asarray(np.finfo(dt).tiny, dt)
+    outlier = (~finite) | too_small | range_bad | ~ok
+    bins = jnp.where(outlier, 0, bin_i)
+    recon = jnp.where(outlier, jnp.zeros((), dt), recon)
+    return Quantized(bins, outlier, recon, sign=neg)

@@ -1,0 +1,132 @@
+"""Host-side byte-stream serializer — the LC-style on-disk/wire format.
+
+Unlike the jit codec (static shapes), this is true variable-length
+encoding: outliers are stored INLINE with the bin numbers via an escape
+code (+maxbin, which the quantizer's range check keeps out of the valid
+bin range), exactly the paper's §3.1 design point vs SZ3's separate
+outlier list.  A final lossless stage (zlib, standing in for LC's
+lossless components) compresses the packed stream.
+
+Layout (little-endian):
+  u32 magic | u8 mode | u8 dtype | u8 bin_bits | u8 flags
+  u64 n | u64 eb_bits (exact target-dtype bits of eb, zero-extended)
+  zlib( bins[n] as i{bin_bits} with +maxbin escapes
+        | payload bits for each escape, in index order
+        | sign plane (REL only, packbits) )
+
+Decode recomputes recon with the SAME expressions as the device decoder
+(numpy, IEEE ops only) — bit parity between host and device decode is a
+test invariant (tests/test_parity.py).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+
+import numpy as np
+
+from .config import QuantizerConfig
+from . import oracle_np as onp
+
+_MAGIC = 0x4C43_4542  # 'LCEB'
+_MODES = {"abs": 0, "rel": 1, "noa": 2}
+_MODES_INV = {v: k for k, v in _MODES.items()}
+_DTYPES = {"float32": 0, "float64": 1}
+_DTYPES_INV = {0: "float32", 1: "float64"}
+_BIN_NP = {8: np.int8, 16: np.int16, 32: np.int32}
+
+
+def _eb_bits(eb: float, dtype: np.dtype) -> int:
+    if dtype == np.float32:
+        return int(np.float32(eb).view(np.uint32))
+    return int(np.float64(eb).view(np.uint64))
+
+
+def _eb_from_bits(bits: int, dtype: np.dtype) -> np.floating:
+    if dtype == np.float32:
+        return np.uint32(bits).view(np.float32)
+    return np.uint64(bits).view(np.float64)
+
+
+def serialize(x: np.ndarray, cfg: QuantizerConfig, level: int = 6) -> bytes:
+    """Full LC-style pipeline on the host: quantize (numpy oracle, bit-
+    identical to the device quantizer) -> pack with inline outliers ->
+    lossless stage."""
+    flat = np.ascontiguousarray(x).reshape(-1)
+    dt = flat.dtype
+    if cfg.mode == "abs":
+        bins, outlier, _ = onp.quantize_abs(flat, cfg)
+        sign = None
+        eb = cfg.np_dtype.type(cfg.error_bound)
+    elif cfg.mode == "rel":
+        bins, outlier, _, sign = onp.quantize_rel(flat, cfg)
+        eb = cfg.np_dtype.type(cfg.error_bound)
+    else:  # noa
+        bins, outlier, _, eb = onp.quantize_noa(flat, cfg)
+        sign = None
+
+    maxbin = cfg.maxbin
+    stored = bins.astype(np.int64)
+    stored[outlier] = maxbin                       # inline escape code
+    packed = stored.astype(_BIN_NP[cfg.bin_bits]).tobytes()
+
+    bits_t = np.uint32 if dt == np.float32 else np.uint64
+    payload = flat[outlier].view(bits_t).tobytes()  # bit-exact, index order
+    body = packed + payload
+    flags = 0
+    if sign is not None:
+        body += np.packbits(sign.astype(np.uint8)).tobytes()
+        flags |= 1
+
+    header = struct.pack(
+        "<IBBBBQQ", _MAGIC, _MODES[cfg.mode], _DTYPES[str(dt)], cfg.bin_bits,
+        flags, flat.size, _eb_bits(float(eb), dt))
+    return header + zlib.compress(body, level)
+
+
+def deserialize(stream: bytes) -> tuple[np.ndarray, QuantizerConfig]:
+    magic, mode_i, dt_i, bin_bits, flags, n, ebb = struct.unpack(
+        "<IBBBBQQ", stream[:24])
+    if magic != _MAGIC:
+        raise ValueError("bad magic")
+    mode = _MODES_INV[mode_i]
+    dtype = np.dtype(_DTYPES_INV[dt_i])
+    eb = _eb_from_bits(ebb, dtype)
+    # NOA's effective eb can be degenerate (all-outlier stream, eb == 0);
+    # the config object still needs a valid bound, the decode below uses
+    # the header eb directly.
+    cfg_eb = float(eb) if float(eb) > 0 else 1.0
+    cfg = QuantizerConfig(mode=mode, error_bound=cfg_eb, bin_bits=bin_bits,
+                          dtype=str(dtype))
+    body = zlib.decompress(stream[24:])
+
+    bin_np = _BIN_NP[bin_bits]
+    bins = np.frombuffer(body[: n * bin_np().itemsize], bin_np).astype(np.int64)
+    off = n * bin_np().itemsize
+    outlier = bins == cfg.maxbin
+    n_out = int(outlier.sum())
+    bits_t = np.uint32 if dtype == np.float32 else np.uint64
+    payload = np.frombuffer(body[off: off + n_out * bits_t().itemsize], bits_t)
+    off += n_out * bits_t().itemsize
+    sign = None
+    if flags & 1:
+        nbytes = (n + 7) // 8
+        sign = np.unpackbits(
+            np.frombuffer(body[off: off + nbytes], np.uint8))[:n].astype(bool)
+
+    bins_clean = np.where(outlier, 0, bins).astype(np.int32)
+    if mode == "rel":
+        out = onp.dequantize_rel(bins_clean, sign, cfg)
+    else:
+        # NOA stored its effective eb in the header, so decode is plain ABS.
+        out = onp.dequantize_abs(bins_clean, cfg, eb=eb)
+    out = out.copy()
+    out[outlier] = payload.view(dtype)             # bit-exact restore
+    return out, cfg
+
+
+def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
+                      stream: bytes | None = None) -> float:
+    if stream is None:
+        stream = serialize(x, cfg, level)
+    return x.nbytes / len(stream)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the codec hot paths (validated in interpret mode
+on CPU; see EXAMPLE.md-style layout: <name>.py kernel, ops.py wrappers,
+ref.py oracles)."""

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The quantizer oracles ARE the core library functions (single source of
+truth for the guarantee); the attention oracle is a direct softmax over the
+dequantized + outlier-corrected cache.  Kernel tests assert bit-equality
+(quantizers) or allclose (attention accumulation order differs) against
+these on shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantizerConfig
+from repro.core import quantizer as q
+
+
+def quantize_abs_ref(x, cfg: QuantizerConfig, eb=None):
+    qt = q.quantize_abs(x, cfg, eb=eb)
+    return qt.bins, qt.outlier, qt.recon
+
+
+def quantize_rel_ref(x, cfg: QuantizerConfig):
+    qt = q.quantize_rel(x, cfg)
+    return qt.bins, qt.outlier, qt.recon, qt.sign
+
+
+def dequantize_abs_ref(bins, payload_bits, outlier, cfg: QuantizerConfig,
+                       eb=None, dtype=jnp.float32):
+    recon = q.dequantize_abs(bins, cfg, eb=eb, dtype=dtype)
+    from repro.core.bitops import bits_to_float
+    return jnp.where(outlier, bits_to_float(payload_bits, dtype), recon)
+
+
+def kv_decode_attention_ref(q, kq, vq, lengths, *, page=128):
+    """Decode attention over a quantized KV cache — plain softmax over the
+    fully dequantized cache (compression.kv.dequantize_kv), one batch/head
+    at a time.  q: [B, G, Hg, D]; kq/vq: QuantizedKV; lengths: [B]."""
+    from repro.compression.kv import dequantize_kv
+
+    b, g, hg, d = q.shape
+    s = kq.bins.shape[2]
+    k = dequantize_kv(kq, page=page)                    # [B, G, S, D]
+    v = dequantize_kv(vq, page=page)
+    scores = jnp.einsum("bghd,bgsd->bghs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    mask = jnp.arange(s)[None, :] < lengths[:, None]    # [B, S]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p_att = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bghs,bgsd->bghd", p_att,
+                      v.astype(jnp.float32)).astype(q.dtype)

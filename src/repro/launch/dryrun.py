@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes (16x16 single-pod = 256 chips, 2x16x16 multi-pod = 512
+chips), print memory_analysis / cost_analysis, and persist per-cell JSON
+for the roofline (results/dryrun/).
+
+The XLA_FLAGS line above MUST run before any jax import (device count
+locks at first init) — which is why this module sets it at line 1-2 and
+why smoke tests / benches never import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+      --shape train_4k --mesh multi
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+Per-cell results are cached; --force recompiles.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, runnable
+from repro.models import build
+from repro.optim import optimizer as opt
+from . import hlo_analysis, mesh as M
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results",
+                           "dryrun")
+
+# Gradient-accumulation factor per arch for train_4k: chosen so the
+# activation peak fits a 16 GiB v5e (measured per-device temp bytes; the
+# big-d and MoE models need it, the small ones do not).
+MICROBATCHES = {
+    "deepseek-67b": 4,
+    "chameleon-34b": 4,
+    "internlm2-20b": 2,
+    "qwen3-moe-235b-a22b": 8,
+    "jamba-1.5-large-398b": 8,
+    "olmoe-1b-7b": 2,
+}
+
+
+def _greedy_sharding(mesh, leaf, skip_dims=(), batch_size=None):
+    """Assign mesh axes to array dims by divisibility (decode caches &
+    batch-like inputs).  The data axes go ONLY to a dim that equals the
+    global batch (sharding the layer-stack dim made the per-layer scan
+    re-gather the whole 1.4 TB cache: 167 GiB/dev measured); 'model' goes
+    to the largest remaining divisible dim, never dim 0 of stacked
+    caches."""
+    dims = list(leaf.shape)
+    spec = [None] * len(dims)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = [a for a in ("pod", "data") if a in axes]
+    dp_size = int(np.prod([axes[a] for a in dp])) if dp else 1
+    for i, d in enumerate(dims):
+        if i in skip_dims:
+            continue
+        if batch_size is not None and d != batch_size:
+            continue
+        if dp and d % dp_size == 0 and d >= dp_size:
+            spec[i] = tuple(dp) if len(dp) > 1 else dp[0]
+            break
+    if "model" in axes:
+        msize = axes["model"]
+        best = None
+        for i, d in enumerate(dims):
+            if spec[i] is None and i not in skip_dims and d % msize == 0 \
+                    and d >= msize:
+                if best is None or d > dims[best]:
+                    best = i
+        if best is not None:
+            spec[best] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def _batch_shardings(mesh, tree):
+    return jax.tree.map(lambda s: _greedy_sharding(mesh, s), tree)
+
+
+def _cell_programs(arch_name, shape_name, mesh, variant="baseline"):
+    """Returns (fn, example_inputs, in_shardings) for lower()."""
+    cfg = registry.get(arch_name)
+    shape = SHAPES[shape_name]
+    bundle = build(cfg)
+    pspecs = M.param_shardings(mesh, bundle.axes(),
+                               bundle.abstract_params())
+    abstract_params = bundle.abstract_params()
+
+    if shape.kind == "train" and variant == "gradcomp":
+        # the paper's technique on the pod wire: compressed-DP train step
+        from repro.compression.grads import GradCompressionConfig
+        from .train import make_train_step_compressed
+
+        assert "pod" in mesh.axis_names, "gradcomp needs the multi-pod mesh"
+        opt_cfg = opt.AdamWConfig(total_steps=1000)
+        ostate_abs = jax.eval_shape(lambda p: opt.init(p, opt_cfg),
+                                    abstract_params)
+        n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+        # compressed-DP design point: params/opt are POD-REPLICATED (FSDP
+        # over 'data' only) and only the compressed gradient crosses pods
+        def drop_pod(ns):
+            spec = tuple(
+                ("data" if (e == "pod" or e == ("pod",)) else
+                 tuple(a for a in e if a != "pod") if isinstance(e, tuple)
+                 else e)
+                for e in ns.spec)
+            spec = tuple(e[0] if isinstance(e, tuple) and len(e) == 1
+                         else (None if e == () else e) for e in spec)
+            return NamedSharding(mesh, P(*spec))
+
+        pspecs = jax.tree.map(drop_pod, pspecs)
+        resid_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, jnp.float32),
+            abstract_params)
+        resid_sh = jax.tree.map(
+            lambda ns: NamedSharding(mesh, P("pod", *ns.spec)), pspecs)
+        like_params = lambda: jax.tree.map(lambda s: s, pspecs)
+        ostate_sh = opt.OptState(M.replicated(mesh), like_params(),
+                                 like_params(), like_params())
+        batch = bundle.input_specs(shape)
+        b_sh = _batch_shardings(mesh, batch)
+        step = make_train_step_compressed(
+            bundle, mesh, opt_cfg, GradCompressionConfig())
+
+        def train_step(params, ostate, resid, batch):
+            (p2, o2, r2), m = step((params, ostate, resid), batch)
+            return p2, o2, r2, m["loss"]
+
+        return (train_step,
+                (abstract_params, ostate_abs, resid_abs, batch),
+                (pspecs, ostate_sh, resid_sh, b_sh), (0, 1, 2))
+
+    if shape.kind == "train":
+        opt_cfg = opt.AdamWConfig(total_steps=1000)
+        ostate_abs = jax.eval_shape(lambda p: opt.init(p, opt_cfg),
+                                    abstract_params)
+        # moments/master shard like the params (ZeRO over 'data')
+        like_params = lambda: jax.tree.map(lambda s: s, pspecs)
+        ostate_sh = opt.OptState(M.replicated(mesh), like_params(),
+                                 like_params(), like_params())
+        batch = bundle.input_specs(shape)
+        b_sh = _batch_shardings(mesh, batch)
+        micro = MICROBATCHES.get(arch_name, 1)
+
+        def train_step(params, ostate, batch):
+            if micro == 1:
+                (loss, (ce, aux)), grads = jax.value_and_grad(
+                    bundle.loss, has_aux=True)(params, batch, mesh)
+            else:
+                # gradient accumulation: activation peak / micro at the
+                # cost of `micro` sequential passes (standard at scale)
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(micro, x.shape[0] // micro,
+                                        *x.shape[1:]), batch)
+
+                def one(acc, mb):
+                    (l, _), g = jax.value_and_grad(
+                        bundle.loss, has_aux=True)(params, mb, mesh)
+                    return jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc, g), l
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, losses = jax.lax.scan(one, zeros, mbs)
+                grads = jax.tree.map(lambda g: g / micro, grads)
+                loss = losses.mean()
+            params, ostate, _m = opt.apply(params, grads, ostate,
+                                           opt_cfg)
+            return params, ostate, loss
+
+        return (train_step, (abstract_params, ostate_abs, batch),
+                (pspecs, ostate_sh, b_sh), (0, 1))
+
+    if shape.kind == "prefill":
+        batch = bundle.input_specs(shape)
+        b_sh = _batch_shardings(mesh, batch)
+
+        def prefill(params, batch):
+            return bundle.prefill(params, batch, mesh)
+
+        return prefill, (abstract_params, batch), (pspecs, b_sh), ()
+
+    # decode
+    quantized = variant == "kvq"
+    ins = bundle.input_specs(shape, quantized_kv=quantized)
+    cache_sh = jax.tree.map(
+        lambda s: _greedy_sharding(mesh, s, skip_dims=(0,),
+                                   batch_size=shape.global_batch),
+        ins["cache"])
+    tok_sh = _greedy_sharding(mesh, ins["tokens"])
+    kv_cfg = None
+    if quantized:
+        from repro.compression.kv import kv_quantizer_config
+        kv_cfg = kv_quantizer_config()
+
+    def serve_step(params, cache, tokens, pos):
+        return bundle.serve_step(params, cache, tokens, pos, mesh,
+                                 kv_cfg=kv_cfg)
+
+    return (serve_step,
+            (abstract_params, ins["cache"], ins["tokens"], ins["pos"]),
+            (pspecs, cache_sh, tok_sh, M.replicated(mesh)), (1,))
+
+
+def run_cell(arch_name, shape_name, mesh_kind, variant="baseline",
+             force=False, save_hlo=True):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{mesh_kind}.{arch_name}.{shape_name}" + (
+        "" if variant == "baseline" else f".{variant}")
+    out_path = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    mesh = M.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "status": "error"}
+    t0 = time.time()
+    try:
+        fn, args, shardings, donate = _cell_programs(
+            arch_name, shape_name, mesh, variant)
+        with jax.set_mesh(mesh):
+            # donation: train aliases old->new (params, opt state); decode
+            # aliases the KV cache — without it the optimizer update keeps
+            # two full f32 state copies alive (~40 GiB/dev on jamba)
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              donate_argnums=donate).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = hlo_analysis.collective_bytes(hlo)
+        coll.pop("__ops", None)
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            arg_bytes=int(ma.argument_size_in_bytes),
+            out_bytes=int(ma.output_size_in_bytes),
+            temp_bytes=int(ma.temp_size_in_bytes),
+            code_bytes=int(ma.generated_code_size_in_bytes),
+            cost_flops=float(ca.get("flops", 0) or 0),
+            cost_bytes=float(ca.get("bytes accessed", 0) or 0),
+            collective_bytes=coll,
+            hlo_dot_flops=int(hlo_analysis.dot_flops(hlo)),
+            n_devices=int(np.prod(mesh.devices.shape)),
+        )
+        if save_hlo:
+            with open(os.path.join(RESULTS_DIR, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in sorted(registry.ARCHS):
+        cfg = registry.get(arch)
+        for shape_name, shape in SHAPES.items():
+            if runnable(cfg, shape):
+                cells.append((arch, shape_name))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = all_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_err = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, variant=args.variant,
+                           force=args.force)
+            ok = rec["status"] == "ok"
+            n_ok += ok
+            n_err += (not ok)
+            if ok:
+                print(f"[OK ] {mk:6s} {arch:26s} {shape:12s} "
+                      f"compile={rec['compile_s']:7.1f}s "
+                      f"temp/dev={rec['temp_bytes']/2**30:6.2f}GiB "
+                      f"args/dev={rec['arg_bytes']/2**30:6.2f}GiB")
+            else:
+                print(f"[ERR] {mk:6s} {arch:26s} {shape:12s} "
+                      f"{rec['error'][:120]}")
+    print(f"\n{n_ok} ok, {n_err} failed")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

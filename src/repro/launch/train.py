@@ -1,0 +1,142 @@
+"""Train-step factories + CLI launcher.
+
+Two step variants:
+  * make_train_step            — baseline: GSPMD owns every axis; the
+    cross-pod gradient reduce is a full-precision all-reduce.
+  * make_train_step_compressed — the paper's technique on the wire: a
+    partial-manual shard_map owns the 'pod' axis; each pod computes local
+    gradients (GSPMD still auto-shards 'data'/'model' INSIDE), then
+    compression/grads.py runs the guaranteed-error-bounded compressed
+    all-reduce with error feedback.  State gains a pod-stacked residual
+    tree (checkpointed — restart-exact).
+
+CLI:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-67b \
+      --steps 100 --batch 8 --seq 256 [--reduced] [--compress-grads]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compression.grads import (GradCompressionConfig,
+                                     compressed_mean_tree)
+from repro.configs import registry
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import build
+from repro.optim import optimizer as opt
+from . import mesh as M
+
+
+def make_train_step(bundle, mesh, opt_cfg: opt.AdamWConfig):
+    def step(state, batch):
+        params, ostate = state
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(params, batch, mesh)
+        params, ostate, metrics = opt.apply(params, grads, ostate, opt_cfg)
+        metrics.update(loss=loss, ce=ce, aux=aux)
+        return (params, ostate), metrics
+
+    return step
+
+
+def make_train_step_compressed(bundle, mesh, opt_cfg: opt.AdamWConfig,
+                               gc_cfg: GradCompressionConfig):
+    """Pod-manual shard_map: grads stay pod-local until the compressed
+    exchange.  moe_data_axes=('data',) because tokens inside are already
+    pod-split."""
+    assert "pod" in mesh.axis_names
+
+    def pod_local(params, batch, resid):
+        # shard_map keeps rank: the pod-sliced residual arrives [1, ...];
+        # squeeze it or it broadcasts a phantom leading dim into the grads
+        # (and from there into the params — caught by the e2e example)
+        resid = jax.tree.map(lambda t: t[0], resid)
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(params, batch, mesh,
+                                       moe_data_axes=("data",))
+        grads, resid = compressed_mean_tree(grads, resid, gc_cfg, "pod")
+        loss = jax.lax.pmean(loss, "pod")
+        return loss, ce, aux, grads, jax.tree.map(lambda t: t[None], resid)
+
+    def specs_like(tree, leading_pod=False):
+        return jax.tree.map(
+            lambda s: P("pod", *(None,) * (s.ndim - 1)) if leading_pod
+            else P(*(None,) * s.ndim), tree)
+
+    def step(state, batch):
+        params, ostate, resid = state
+        abstract_p = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        abstract_b = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        abstract_r = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), resid)
+        mapped = jax.shard_map(
+            pod_local, mesh=mesh,
+            in_specs=(specs_like(abstract_p),
+                      specs_like(abstract_b, leading_pod=True),
+                      specs_like(abstract_r, leading_pod=True)),
+            out_specs=(P(), P(), P(), specs_like(abstract_p),
+                       specs_like(abstract_r, leading_pod=True)),
+            axis_names={"pod"}, check_vma=False)
+        loss, ce, aux, grads, resid = mapped(params, batch, resid)
+        params, ostate, metrics = opt.apply(params, grads, ostate, opt_cfg)
+        metrics.update(loss=loss, ce=ce, aux=aux)
+        return (params, ostate, resid), metrics
+
+    return step
+
+
+def init_residuals(params, n_pods: int):
+    """Pod-stacked error-feedback buffers (f32, checkpointed)."""
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_pods,) + x.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------- CLI ----
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(registry.ARCHS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-ckpt")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.AdamWConfig(lr=args.lr, total_steps=args.steps)
+    ostate = opt.init(params, opt_cfg)
+    pipe = TokenPipeline(DataConfig(cfg.vocab, args.seq, args.batch))
+    step = jax.jit(make_train_step(bundle, None, opt_cfg))
+
+    state = (params, ostate)
+    for i in range(args.steps):
+        b = pipe.batch(i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(i), (args.batch, cfg.enc_context,
+                                        cfg.d_model), jnp.bfloat16)
+        state, metrics = step(state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: dense/MoE/hybrid/SSM/enc-dec families behind one dispatcher
+(models.model.build)."""
+from .model import ModelBundle, build

@@ -1,0 +1,174 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: `input_specs()`
+provides precomputed frame embeddings [B, enc_context, D].  Encoder =
+bidirectional self-attention + GELU FFN; decoder = causal self-attention +
+cross-attention + GELU FFN; learned positional embeddings; pre-LayerNorm
+with bias (whisper convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from .params import ParamSpec
+from .serve import RawCache
+from .transformer import DTYPE
+
+MAX_DEC_LEN = 32_768          # covers decode_32k / prefill_32k shapes
+
+
+def _ln(lead, d):
+    ax = tuple(None for _ in lead)
+    return {"w": ParamSpec(lead + (d,), jnp.float32, ax + (None,), -1.0),
+            "b": ParamSpec(lead + (d,), jnp.float32, ax + (None,), 0.0)}
+
+
+def _attn(cfg, lead):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ax = tuple(None for _ in lead)
+    return {
+        "ln": _ln(lead, d),
+        "wq": ParamSpec(lead + (d, h * hd), DTYPE, ax + ("embed", "heads")),
+        "wkv": ParamSpec(lead + (d, 2 * h * hd), DTYPE, ax + ("embed", "heads")),
+        "wo": ParamSpec(lead + (h * hd, d), DTYPE, ax + ("heads", "embed")),
+    }
+
+
+def _ffn(cfg, lead):
+    d, f = cfg.d_model, cfg.d_ff
+    ax = tuple(None for _ in lead)
+    return {
+        "ln": _ln(lead, d),
+        "w1": ParamSpec(lead + (d, f), DTYPE, ax + ("embed", "mlp")),
+        "w2": ParamSpec(lead + (f, d), DTYPE, ax + ("mlp", "embed")),
+    }
+
+
+def param_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    el, dl = cfg.enc_layers, cfg.n_layers
+    return {
+        "emb": ParamSpec((cfg.padded_vocab, d), DTYPE,
+                         ("vocab", "embed")),
+        "enc_pos": ParamSpec((cfg.enc_context, d), DTYPE, (None, "embed")),
+        "dec_pos": ParamSpec((MAX_DEC_LEN, d), DTYPE, (None, "embed")),
+        "enc": {"self": _attn(cfg, (el,)), "ffn": _ffn(cfg, (el,))},
+        "dec": {"self": _attn(cfg, (dl,)), "cross": _attn(cfg, (dl,)),
+                "ffn": _ffn(cfg, (dl,))},
+        "enc_norm": _ln((), d),
+        "final_norm": _ln((), d),
+    }
+
+
+def _mha(cfg, p, xq, xkv, causal, ctx=L.NULL_CTX):
+    b, sq, d = xq.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = ctx((xq @ p["wq"]).reshape(b, sq, h, hd), 'dp', None, 'model', None)
+    kv = (xkv @ p["wkv"]).reshape(b, xkv.shape[1], 2, h, hd)
+    o = L.flash_attention(q, kv[:, :, 0], kv[:, :, 1], causal=causal,
+                          ctx=ctx)
+    return ctx(o.reshape(b, sq, h * hd) @ p["wo"], 'dp', None, None)
+
+
+def _block_ln(p, x, eps):
+    return L.layer_norm(x, p["w"], p["b"], eps)
+
+
+def encode(cfg: ArchConfig, params, frames, ctx=L.NULL_CTX):
+    """frames: [B, enc_context, D] (stubbed frontend output)."""
+    x = ctx(frames.astype(DTYPE) + params["enc_pos"][None].astype(DTYPE),
+            'dp', None, None)
+
+    def body2(h, lp):
+        h = ctx(h, 'dp', None, None)
+        hn = _block_ln(lp["self"]["ln"], h, cfg.norm_eps)
+        h = h + _mha(cfg, lp["self"], hn, hn, causal=False, ctx=ctx)
+        hn = _block_ln(lp["ffn"]["ln"], h, cfg.norm_eps)
+        h = h + L.ffn(hn, lp["ffn"]["w1"], None, lp["ffn"]["w2"], "gelu",
+                      ctx=ctx)
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body2), x, params["enc"])
+    return _block_ln(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, tokens, frames, mesh=None, remat=True):
+    """Teacher-forced decoder over stubbed audio frames."""
+    ctx = L.ShardCtx(mesh)
+    enc_out = encode(cfg, params, frames, ctx)
+    b, s = tokens.shape
+    x = ctx((params["emb"][tokens]
+             + params["dec_pos"][:s][None]).astype(DTYPE), 'dp', None, None)
+
+    def body(h, lp):
+        h = ctx(h, 'dp', None, None)
+        hn = _block_ln(lp["self"]["ln"], h, cfg.norm_eps)
+        h = h + _mha(cfg, lp["self"], hn, hn, causal=True, ctx=ctx)
+        hn = _block_ln(lp["cross"]["ln"], h, cfg.norm_eps)
+        h = h + _mha(cfg, lp["cross"], hn, enc_out, causal=False, ctx=ctx)
+        hn = _block_ln(lp["ffn"]["ln"], h, cfg.norm_eps)
+        h = h + L.ffn(hn, lp["ffn"]["w1"], None, lp["ffn"]["w2"], "gelu",
+                      ctx=ctx)
+        return h, None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = _block_ln(params["final_norm"], x, cfg.norm_eps)
+    logits = ctx(x @ params["emb"].T.astype(DTYPE), 'dp', None, 'model')
+    return logits, jnp.float32(0)
+
+
+def make_cache(cfg: ArchConfig, batch, seq):
+    """(decoder self-attn KV cache, cross-attn KV computed at prefill)."""
+    dl, h, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    self_kv = RawCache(
+        jnp.zeros((dl, batch, seq, h, hd), DTYPE),
+        jnp.zeros((dl, batch, seq, h, hd), DTYPE))
+    cross_kv = RawCache(
+        jnp.zeros((dl, batch, cfg.enc_context, h, hd), DTYPE),
+        jnp.zeros((dl, batch, cfg.enc_context, h, hd), DTYPE))
+    return (self_kv, cross_kv)
+
+
+def serve_step(cfg: ArchConfig, params, cache, tokens, pos, mesh=None,
+               kv_cfg=None):
+    """One decoder token; cross-attn KV precomputed in the cache."""
+    self_kv, cross_kv = cache
+    b = tokens.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    pos_emb = jax.lax.dynamic_slice(params["dec_pos"],
+                                    (pos, 0), (1, cfg.d_model))
+    x = (params["emb"][tokens] + pos_emb[None]).astype(DTYPE)
+
+    def body(hh, xs):
+        lp, kc, vc, ck, cv = xs
+        hn = _block_ln(lp["self"]["ln"], hh, cfg.norm_eps)
+        q = (hn @ lp["self"]["wq"]).reshape(b, 1, h, hd)
+        kv = (hn @ lp["self"]["wkv"]).reshape(b, 1, 2, h, hd)
+        kc = jax.lax.dynamic_update_slice(kc, kv[:, :, 0].astype(kc.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, kv[:, :, 1].astype(vc.dtype),
+                                          (0, pos, 0, 0))
+        lengths = jnp.full((b,), pos + 1, jnp.int32)
+        o = L.decode_attention(q, kc, vc, lengths)
+        hh = hh + o.reshape(b, 1, h * hd) @ lp["self"]["wo"]
+
+        hn = _block_ln(lp["cross"]["ln"], hh, cfg.norm_eps)
+        q = (hn @ lp["cross"]["wq"]).reshape(b, 1, h, hd)
+        o = L.decode_attention(
+            q, ck, cv, jnp.full((b,), ck.shape[1], jnp.int32))
+        hh = hh + o.reshape(b, 1, h * hd) @ lp["cross"]["wo"]
+
+        hn = _block_ln(lp["ffn"]["ln"], hh, cfg.norm_eps)
+        hh = hh + L.ffn(hn, lp["ffn"]["w1"], None, lp["ffn"]["w2"], "gelu")
+        return hh, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["dec"], self_kv.k, self_kv.v, cross_kv.k,
+                  cross_kv.v))
+    x = _block_ln(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["emb"].T.astype(DTYPE))[:, 0].astype(jnp.float32)
+    return logits, (RawCache(kc, vc), cross_kv)

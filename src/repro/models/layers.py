@@ -1,0 +1,247 @@
+"""Shared model layers, written as GLOBAL math (GSPMD-style): functions
+compute on full logical shapes; layout is imposed by in_shardings +
+with_sharding_constraint at the few activation seams that matter (see
+launch/mesh.py).  No manual collective bookkeeping — the dry-run roofline
+reads whatever GSPMD inserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+NEG_BIG = -1e30
+
+
+class ShardCtx:
+    """Activation sharding constraints (MaxText-style).
+
+    GSPMD propagation alone replicates attention internals through the
+    nested flash scans (measured: 530 GiB/device temp on stablelm
+    train_4k).  `ctx(x, 'dp', None, 'model', None)` pins batch to the data
+    axes and heads/ff to 'model' at the few seams that matter; axes whose
+    size does not divide the dimension are dropped (e.g. whisper's 8 heads
+    on a 16-way model axis -> replicated, visible in the roofline).
+    """
+
+    def __init__(self, mesh, dp=None):
+        self.mesh = mesh
+        if mesh is None:
+            self.dp = ()
+            self.sizes = {}
+        else:
+            self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self.dp = tuple(dp) if dp is not None else tuple(
+                a for a in ("pod", "data") if a in self.sizes)
+
+    def _axis_size(self, a):
+        if isinstance(a, tuple):
+            n = 1
+            for x in a:
+                n *= self.sizes[x]
+            return n
+        return self.sizes[a]
+
+    def __call__(self, x, *axes):
+        if self.mesh is None:
+            return x
+        spec = []
+        for dim, a in zip(x.shape, axes):
+            if a == "dp":
+                a = self.dp if len(self.dp) != 1 else self.dp[0]
+            if a is None or a == () or dim % self._axis_size(a) != 0:
+                spec.append(None)
+            else:
+                spec.append(a)
+        # P-only constraint: resolved against the CONTEXT mesh, so it
+        # works identically under jit and inside partial-manual shard_map
+        # regions (a concrete NamedSharding's mesh would mismatch there)
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+NULL_CTX = ShardCtx(None)
+
+
+def rms_norm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+def rope_tables(positions, dim, base=10000.0):
+    """positions: int32 [...]; returns (cos, sin) of shape [..., dim/2]."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, mode="full"):
+    """x: [B, S, H, hd]; cos/sin: [B or 1, S, rot/2].
+
+    mode 'full': rotate the whole head dim; 'partial' (chatglm3 2d-RoPE):
+    rotate only the first half of the head dim, pass the rest through;
+    'none': identity."""
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if mode == "full" else hd // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[..., None, :].astype(x.dtype)       # [B, S, 1, rot/2]
+    s = sin[..., None, :].astype(x.dtype)
+    y = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([y, xp], axis=-1) if mode == "partial" else y
+
+
+# --- attention --------------------------------------------------------------
+
+def repeat_kv(kv, group_size):
+    """[B, S, G, hd] -> [B, S, G*group_size, hd]."""
+    if group_size == 1:
+        return kv
+    b, s, g, hd = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, g, group_size, hd)
+                            ).reshape(b, s, g * group_size, hd)
+
+
+def flash_attention(q, k, v, *, causal=True, q_block=512, kv_block=1024,
+                    ctx=NULL_CTX):
+    """Online-softmax blocked attention in pure JAX (TPU flash pattern):
+    memory O(q_block * kv_block) per step instead of O(S^2).
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, H, hd] (GQA repeat done by caller).
+    Block loops are lax.scans so the HLO stays O(1) in sequence length and
+    the dry-run compiles for 512k contexts.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+
+    def pick(n, target):
+        # largest divisor <= target (whisper's 1500-frame encoder etc.)
+        for c in range(min(target, n), 0, -1):
+            if n % c == 0:
+                return c
+        return n
+
+    q_block = pick(sq, q_block)
+    kv_block = pick(skv, kv_block)
+    nq, nk = sq // q_block, skv // kv_block
+    scale = 1.0 / (hd ** 0.5)
+
+    qs = ctx(q.reshape(b, nq, q_block, h, hd).transpose(1, 0, 2, 3, 4),
+             None, 'dp', None, 'model', None)
+    ks = ctx(k.reshape(b, nk, kv_block, h, hd).transpose(1, 0, 2, 3, 4),
+             None, 'dp', None, 'model', None)
+    vs = ctx(v.reshape(b, nk, kv_block, h, hd).transpose(1, 0, 2, 3, 4),
+             None, 'dp', None, 'model', None)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, k_blk, v_blk = ki_kv
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = ctx(s, 'dp', 'model', None, None)
+            if causal:
+                qpos = qi * q_block + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_block, kv_block), 0)
+                kpos = ki * kv_block + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_block, kv_block), 1)
+                s = jnp.where((kpos <= qpos)[None, None], s, NEG_BIG)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new,
+                    ctx(acc_new, 'dp', 'model', None, None)), None
+
+        m0 = jnp.full((b, h, q_block), NEG_BIG, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        # checkpoint: flash BACKWARD recomputes block scores instead of
+        # saving the effectively-S^2 score stack across scan iterations
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nk), ks, vs))
+        out = acc / l[..., None]
+        return None, out.transpose(0, 2, 1, 3)        # [B, qb, H, hd]
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return (outs.transpose(1, 0, 2, 3, 4)
+            .reshape(b, sq, h, hd).astype(q.dtype))
+
+
+def decode_attention(q, k_cache, v_cache, lengths, ctx=NULL_CTX):
+    """Single-token GQA decode: q [B, 1, H, hd]; caches [B, S, G, hd];
+    lengths int32 [B].  Grouped einsum keeps memory O(S), no KV repeat
+    (S can be 512k)."""
+    b, _, h, hd = q.shape
+    s, g = k_cache.shape[1], k_cache.shape[2]
+    gs = h // g
+    qg = q.reshape(b, g, gs, hd)
+    scores = ctx(jnp.einsum("bgqd,bsgd->bgqs", qg.astype(jnp.float32),
+                            k_cache.astype(jnp.float32)) / (hd ** 0.5),
+                 'dp', 'model', None, None)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_BIG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgqs,bsgd->bgqd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def chunked_scan(step, carry, xs, chunk: int = 64, remat: bool = True):
+    """Time scan in remat'd chunks: the backward pass saves carries only at
+    chunk boundaries and replays inside.  A flat scan over T saves the
+    carry EVERY step — for mLSTM's matrix state that was 12 TiB/device on
+    train_4k.  xs leaves are [T, ...]."""
+    t = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, t)
+    if t % chunk:
+        chunk = 1
+    n_chunks = t // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(n_chunks, chunk, *a.shape[1:]), xs)
+
+    def chunk_body(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    body = jax.checkpoint(chunk_body) if remat else chunk_body
+    carry, ys = jax.lax.scan(body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(t, *a.shape[2:]), ys)
+    return carry, ys
+
+
+# --- FFN --------------------------------------------------------------------
+
+def ffn(x, w1, w3, w2, act="swiglu", ctx=NULL_CTX):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ w1) * (x @ w3)
+    else:  # gelu (whisper)
+        h = jax.nn.gelu(x @ w1, approximate=True)
+    h = ctx(h, 'dp', None, 'model')
+    return h @ w2
+
+
+# --- init helpers -----------------------------------------------------------
+
+def trunc_init(key, shape, dtype, scale=0.02):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)

@@ -1,0 +1,89 @@
+"""Mamba (selective SSM) block — the sub-quadratic half of jamba.
+
+Baseline implementation uses a sequential lax.scan over time (exact
+recurrence, O(T) memory via carry; the HLO stays O(1) in T).  A chunked
+parallel form is a known perf lever (§Perf notes) — the roofline for the
+hybrid arch is dominated by attention+MoE layers, so the scan is not the
+bottleneck at the assigned shapes.
+
+State per layer: conv tail [B, K-1, Di] + ssm state [B, Di, N] — this is
+what replaces the KV cache for decode (and what compression/kv.py
+quantizes for the 'SSM state compression' variant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CONV_K = 4
+
+
+def mamba_params_shape(d_model, d_state, dtype):
+    di = 2 * d_model
+    return {
+        "in_proj": ((d_model, 2 * di), dtype),
+        "conv_w": ((CONV_K, di), jnp.float32),
+        "a_log": ((di, d_state), jnp.float32),
+        "d_skip": ((di,), jnp.float32),
+        "bc_proj": ((di, 2 * d_state), dtype),
+        "dt_proj": ((di, di), dtype),
+        "dt_bias": ((di,), jnp.float32),
+        "out_proj": ((di, d_model), dtype),
+    }
+
+
+def _ssm_step_factory(a):
+    """a: [Di, N] static per layer.  The [B,Di,N] da/dbx terms are formed
+    INSIDE the step from [B,Di]/[B,N] inputs — materializing them for all
+    T as scan xs cost 17+ GiB/device on jamba train_4k."""
+
+    def step(h, inputs):
+        dt_u, bmat, c, dt = inputs  # [B,Di], [B,N], [B,N], [B,Di]
+        da = dt[..., None] * a
+        h = jnp.exp(da) * h + dt_u[..., None] * bmat[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    return step
+
+
+def mamba_block(p, x, state=None, ctx=None):
+    """x: [B, T, D].  state: (conv_tail [B, K-1, Di], h [B, Di, N]) for
+    decode; None for training (zero init).  Returns (y, new_state)."""
+    b, t, d = x.shape
+    di = p["conv_w"].shape[1]
+    n = p["a_log"].shape[1]
+    if ctx is None:
+        from .layers import NULL_CTX as ctx
+    xz = ctx(x @ p["in_proj"], 'dp', None, 'model')
+    xin, z = jnp.split(xz, 2, axis=-1)                     # [B, T, Di]
+
+    # causal depthwise conv over time
+    if state is None:
+        tail = jnp.zeros((b, CONV_K - 1, di), xin.dtype)
+    else:
+        tail = state[0]
+    xpad = jnp.concatenate([tail, xin], axis=1)            # [B, T+K-1, Di]
+    conv = sum(xpad[:, i: i + t] * p["conv_w"][i].astype(xin.dtype)
+               for i in range(CONV_K))
+    new_tail = xpad[:, -(CONV_K - 1):]
+    u = jax.nn.silu(conv)                                  # [B, T, Di]
+
+    bc = u @ p["bc_proj"]
+    bmat, cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [B,T,N]
+    dt = jax.nn.softplus((u @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                   # [B, T, Di]
+    dt = ctx(dt, 'dp', None, 'model')
+    a = -jnp.exp(p["a_log"])                               # [Di, N]
+    dt_u = dt * u.astype(jnp.float32)
+
+    h0 = jnp.zeros((b, di, n), jnp.float32) if state is None else state[1]
+    from .layers import chunked_scan
+    h, ys = chunked_scan(
+        _ssm_step_factory(a), h0,
+        (dt_u.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+         cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)              # [B, T, Di]
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_tail, h)

@@ -1,0 +1,139 @@
+"""Family dispatcher: ArchConfig -> (param specs, loss fn, serve fn,
+cache factory, input specs).  The single public surface used by smoke
+tests, the launcher, and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import encdec, serve, transformer, xlstm_stack
+from .params import abstract, axes_tree, count_params, materialize
+from .serve import PAGE, QuantCache, RawCache
+from .transformer import DTYPE
+
+
+class ModelBundle(NamedTuple):
+    cfg: ArchConfig
+    specs: dict
+
+    # --- params -----------------------------------------------------------
+    def init(self, key):
+        return materialize(self.specs, key)
+
+    def abstract_params(self):
+        return abstract(self.specs)
+
+    def axes(self):
+        return axes_tree(self.specs)
+
+    def n_params(self) -> int:
+        return count_params(self.specs)
+
+    # --- training ---------------------------------------------------------
+    def loss(self, params, batch, mesh=None, remat=True,
+             moe_data_axes=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, aux = encdec.forward(cfg, params, batch["tokens"],
+                                         batch["frames"], mesh, remat)
+        elif cfg.family == "ssm":
+            logits, aux = xlstm_stack.forward(cfg, params, batch["tokens"],
+                                              mesh, remat)
+        else:
+            logits, aux = transformer.forward(cfg, params, batch["tokens"],
+                                              mesh, remat, moe_data_axes)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(lse - ll)
+        return ce + 0.01 * aux, (ce, aux)
+
+    # --- serving ----------------------------------------------------------
+    def make_cache(self, batch, seq, quantized=False):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return xlstm_stack.make_cache(cfg, batch, seq)
+        if cfg.family == "encdec":
+            return encdec.make_cache(cfg, batch, seq)
+        if cfg.family == "hybrid":
+            periods = cfg.n_layers // cfg.attn_period
+            n_mamba = cfg.attn_period - 1
+            di = 2 * cfg.d_model
+            attn = serve.make_raw_cache(cfg, batch, seq, n_layers=periods)
+            tails = jnp.zeros((periods, n_mamba, batch, serve.M.CONV_K - 1,
+                               di), DTYPE)
+            hs = jnp.zeros((periods, n_mamba, batch, di, cfg.ssm_state),
+                           jnp.float32)
+            return (attn, (tails, hs))
+        if quantized:
+            return serve.make_quant_cache(cfg, batch, seq)
+        return serve.make_raw_cache(cfg, batch, seq)
+
+    def serve_step(self, params, cache, tokens, pos, mesh=None, kv_cfg=None):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return xlstm_stack.serve_step(cfg, params, cache, tokens, pos,
+                                          mesh, kv_cfg)
+        if cfg.family == "encdec":
+            return encdec.serve_step(cfg, params, cache, tokens, pos, mesh,
+                                     kv_cfg)
+        return serve.serve_step(cfg, params, cache, tokens, pos, mesh,
+                                kv_cfg)
+
+    # --- dry-run inputs ----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, quantized_kv=False):
+        """ShapeDtypeStruct stand-ins for every model input of this
+        (arch, shape) cell — no device allocation."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            d = {"tokens": tok, "labels": tok}
+            if cfg.family == "encdec":
+                d["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_context, cfg.d_model), DTYPE)
+            return d
+        if shape.kind == "prefill":
+            d = {"tokens": tok}
+            if cfg.family == "encdec":
+                d["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_context, cfg.d_model), DTYPE)
+            return d
+        # decode: one new token against a seq_len cache
+        cache = jax.eval_shape(
+            lambda: self.make_cache(b, s, quantized=quantized_kv))
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": cache,
+        }
+
+    def prefill(self, params, batch, mesh=None):
+        """Forward pass without loss (the prefill_32k shape's program)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, _ = encdec.forward(cfg, params, batch["tokens"],
+                                       batch["frames"], mesh, remat=False)
+        elif cfg.family == "ssm":
+            logits, _ = xlstm_stack.forward(cfg, params, batch["tokens"],
+                                            mesh, remat=False)
+        else:
+            logits, _ = transformer.forward(cfg, params, batch["tokens"],
+                                            mesh, remat=False)
+        return logits[:, -1].astype(jnp.float32)
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == "ssm":
+        specs = xlstm_stack.param_specs(cfg)
+    elif cfg.family == "encdec":
+        specs = encdec.param_specs(cfg)
+    else:
+        specs = transformer.param_specs(cfg)
+    return ModelBundle(cfg, specs)

@@ -1,0 +1,106 @@
+"""xLSTM model stack (alternating mLSTM / sLSTM pairs under scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from .params import ParamSpec
+from .transformer import DTYPE
+from .xlstm import (mlstm_block, mlstm_params_shape, slstm_block,
+                    slstm_params_shape)
+
+
+def param_specs(cfg: ArchConfig):
+    pairs = cfg.n_layers // 2
+    d = cfg.d_model
+
+    def from_shapes(shapes, lead):
+        ax = tuple(None for _ in lead)
+        out = {}
+        for name, (shape, dt) in shapes.items():
+            # shard only the LAST matching wide dim (square/multi-wide
+            # projections would otherwise duplicate the 'model' axis)
+            axes = [None] * len(shape)
+            for i in range(len(shape) - 1, -1, -1):
+                if shape[i] in (2 * d, 4 * 2 * d, 3 * 2 * d, 8 * d):
+                    axes[i] = "mlp"
+                    break
+            out[name] = ParamSpec(lead + shape, dt, ax + tuple(axes))
+        return out
+
+    return {
+        "emb": ParamSpec((cfg.padded_vocab, d), DTYPE,
+                         ("vocab", "embed")),
+        "final_norm": ParamSpec((d,), jnp.float32, (None,), -1.0),
+        "m_norm": ParamSpec((pairs, d), jnp.float32, (None, None), -1.0),
+        "s_norm": ParamSpec((pairs, d), jnp.float32, (None, None), -1.0),
+        "mlstm": from_shapes(mlstm_params_shape(d, cfg.n_heads, DTYPE),
+                             (pairs,)),
+        "slstm": from_shapes(slstm_params_shape(d, cfg.n_heads, DTYPE),
+                             (pairs,)),
+    }
+
+
+def forward(cfg: ArchConfig, params, tokens, mesh=None, remat=True):
+    ctx = L.ShardCtx(mesh)
+    x = ctx(params["emb"][tokens].astype(DTYPE), 'dp', None, None)
+
+    def pair(h, pp):
+        h = ctx(h, 'dp', None, None)
+        hn = L.rms_norm(h, pp["m_norm"], cfg.norm_eps)
+        y, _ = mlstm_block(pp["mlstm"], hn, cfg.n_heads, ctx=ctx)
+        h = h + y
+        hn = L.rms_norm(h, pp["s_norm"], cfg.norm_eps)
+        y, _ = slstm_block(pp["slstm"], hn, cfg.n_heads, ctx=ctx)
+        return h + y, None
+
+    body = jax.checkpoint(pair) if remat else pair
+    x, _ = jax.lax.scan(body, x, {"mlstm": params["mlstm"],
+                                  "slstm": params["slstm"],
+                                  "m_norm": params["m_norm"],
+                                  "s_norm": params["s_norm"]})
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ctx(x @ params["emb"].T.astype(DTYPE), 'dp', None, 'model')
+    return logits, jnp.float32(0)
+
+
+def make_cache(cfg: ArchConfig, batch, _seq):
+    """Recurrent state replaces the KV cache: O(1) in context length —
+    this is why xlstm runs long_500k."""
+    pairs = cfg.n_layers // 2
+    d = cfg.d_model
+    di = 2 * d
+    h, dh = cfg.n_heads, (2 * d) // cfg.n_heads
+    return {
+        "m": (jnp.zeros((pairs, batch, h, dh, dh), jnp.float32),
+              jnp.zeros((pairs, batch, h, dh), jnp.float32),
+              jnp.full((pairs, batch, h), -1e30, jnp.float32)),
+        "s": (jnp.zeros((pairs, batch, h, dh), jnp.float32),
+              jnp.ones((pairs, batch, h, dh), jnp.float32),
+              jnp.zeros((pairs, batch, h, dh), jnp.float32),
+              jnp.zeros((pairs, batch, h, dh), jnp.float32)),
+    }
+
+
+def serve_step(cfg: ArchConfig, params, cache, tokens, pos, mesh=None,
+               kv_cfg=None):
+    x = params["emb"][tokens].astype(DTYPE)
+
+    def pair(h, xs):
+        pp, m_state, s_state = xs
+        hn = L.rms_norm(h, pp["m_norm"], cfg.norm_eps)
+        y, m_state = mlstm_block(pp["mlstm"], hn, cfg.n_heads, state=m_state)
+        h = h + y
+        hn = L.rms_norm(h, pp["s_norm"], cfg.norm_eps)
+        y, s_state = slstm_block(pp["slstm"], hn, cfg.n_heads, state=s_state)
+        return h + y, (m_state, s_state)
+
+    x, (m_s, s_s) = jax.lax.scan(
+        pair, x, ({"mlstm": params["mlstm"], "slstm": params["slstm"],
+                   "m_norm": params["m_norm"], "s_norm": params["s_norm"]},
+                  cache["m"], cache["s"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["emb"].T.astype(DTYPE))[:, 0].astype(jnp.float32)
+    return logits, {"m": m_s, "s": s_s}

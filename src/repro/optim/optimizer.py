@@ -1,0 +1,86 @@
+"""AdamW with f32 master copies over (possibly bf16) params, cosine
+schedule with warmup, global-norm clipping.  Optimizer state shards like
+the params (FSDP over 'data') — ZeRO-style; see launch/mesh.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray      # i32 scalar
+    mu: dict               # f32, like params
+    nu: dict               # f32, like params
+    master: dict           # f32 master copy of params
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros), f32(params))
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(step, cfg)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master
+        return mu, nu, master - lr * delta
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    flat_ma = jax.tree.leaves(state.master)
+    new_mu, new_nu, new_ma = [], [], []
+    for g, mu, nu, ma in zip(flat_g, flat_mu, flat_nu, flat_ma):
+        a, b, c = upd(g, mu, nu, ma)
+        new_mu.append(a)
+        new_nu.append(b)
+        new_ma.append(c)
+    unf = lambda l: jax.tree.unflatten(tree, l)
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype),
+                              unf(new_ma), params)
+    return new_params, OptState(step, unf(new_mu), unf(new_nu),
+                                unf(new_ma)), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,45 @@
+"""Elastic scaling: rebuild the mesh at a new size and re-shard state.
+
+Shardings are pure functions of (logical param axes, mesh) — launch/mesh.py
+rules — and checkpoints store plain host arrays, so ANY checkpoint restores
+onto ANY mesh whose axes divide the dims.  Scale-down after losing a pod /
+scale-up after capacity returns is: checkpoint -> resize() -> continue.
+The data pipeline is stateless-in-step, so no iterator surgery is needed;
+only `global_batch % new_dp == 0` is re-validated.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.launch import mesh as M
+
+
+def make_mesh_for(devices=None, model_parallel: int | None = None) -> Mesh:
+    """Build the largest (data, model) mesh from the devices at hand."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    mp = model_parallel or min(16, n)
+    while n % mp:
+        mp -= 1
+    arr = np.asarray(devices).reshape(n // mp, mp)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state, axes_tree_fn, mesh: Mesh):
+    """Place a host-restored state tree onto `mesh` with rule-derived
+    shardings (params/opt) — the core of the elastic resize."""
+    shardings = axes_tree_fn(mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+def resize(ckpt_manager, template, axes_tree_fn, model_parallel=None):
+    """checkpoint -> rebuild mesh from the CURRENT device set -> restore +
+    re-shard.  Returns (state, step, mesh)."""
+    state, step = ckpt_manager.restore(template)
+    if state is None:
+        raise RuntimeError("no checkpoint to resize from")
+    mesh = make_mesh_for(model_parallel=model_parallel)
+    return reshard_state(state, axes_tree_fn, mesh), step, mesh

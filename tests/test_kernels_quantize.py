@@ -1,0 +1,111 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs the pure-jnp
+oracle in kernels/ref.py, swept over shapes and bounds.  Quantizers must be
+BIT-exact (they are the guarantee); see test_kernel_attention.py for the
+allclose-validated attention kernel."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import QuantizerConfig
+from repro.core.bitops import float_to_bits
+from repro.kernels import ops
+from repro.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+SHAPES = [(64,), (1000,), (4096,), (128, 128), (3, 5, 7), (32768,),
+          (1, 1), (65537,)]
+
+
+def _mix(shape):
+    """Values spanning normals, specials, denormals, bin borders."""
+    x = (RNG.standard_normal(shape) * 10).astype(np.float32)
+    flat = x.reshape(-1)
+    if flat.size >= 8:
+        flat[0] = np.nan
+        flat[1] = np.inf
+        flat[2] = -np.inf
+        flat[3] = 0.0
+        flat[4] = -0.0
+        flat[5] = 1e-42        # denormal
+        flat[6] = np.finfo(np.float32).max
+        flat[7] = 5e-4         # near a bin border for eb=1e-3
+    return flat.reshape(shape)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("eb", [1e-2, 1e-5])
+def test_quantize_abs_kernel_bit_exact(shape, eb):
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    x = jnp.asarray(_mix(shape))
+    k = ops.quantize_abs(x, cfg, interpret=True)
+    rb, ro, rr = ref.quantize_abs_ref(x, cfg)
+    np.testing.assert_array_equal(np.asarray(k.bins), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(k.outlier), np.asarray(ro))
+    np.testing.assert_array_equal(
+        np.asarray(k.recon).view(np.uint32), np.asarray(rr).view(np.uint32))
+
+
+@pytest.mark.parametrize("shape", [(4096,), (128, 128), (65537,)])
+def test_quantize_abs_kernel_traced_eb(shape):
+    cfg = QuantizerConfig(mode="abs", error_bound=1.0)  # placeholder
+    x = jnp.asarray(_mix(shape))
+    eb = jnp.float32(3.7e-3)   # per-tensor bound as a traced scalar
+    k = ops.quantize_abs(x, cfg, eb=eb, interpret=True)
+    rb, ro, rr = ref.quantize_abs_ref(x, cfg, eb=eb)
+    np.testing.assert_array_equal(np.asarray(k.bins), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(k.outlier), np.asarray(ro))
+
+
+def test_quantize_abs_kernel_degenerate_eb():
+    cfg = QuantizerConfig(mode="abs", error_bound=1.0)
+    x = jnp.asarray(_mix((2048,)))
+    k = ops.quantize_abs(x, cfg, eb=jnp.float32(0.0), interpret=True)
+    assert bool(jnp.all(k.outlier))      # below floor -> whole tensor lossless
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("eb", [1e-2, 1e-4])
+def test_quantize_rel_kernel_bit_exact(shape, eb):
+    cfg = QuantizerConfig(mode="rel", error_bound=eb, bin_bits=32)
+    x = jnp.asarray(_mix(shape))
+    k = ops.quantize_rel(x, cfg, interpret=True)
+    rb, ro, rr, rs = ref.quantize_rel_ref(x, cfg)
+    np.testing.assert_array_equal(np.asarray(k.bins), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(k.outlier), np.asarray(ro))
+    np.testing.assert_array_equal(
+        np.asarray(k.recon).view(np.uint32), np.asarray(rr).view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(k.sign), np.asarray(rs))
+
+
+@pytest.mark.parametrize("shape", [(4096,), (128, 128), (65537,)])
+@pytest.mark.parametrize("eb", [1e-2, 1e-5])
+def test_dequantize_abs_kernel_roundtrip(shape, eb):
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    x = jnp.asarray(_mix(shape))
+    k = ops.quantize_abs(x, cfg, interpret=True)
+    payload = jnp.where(k.outlier, float_to_bits(x), 0)
+    y = ops.dequantize_abs(k.bins, payload, k.outlier, cfg, interpret=True)
+    r = ref.dequantize_abs_ref(k.bins, payload, k.outlier, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(y).view(np.uint32), np.asarray(r).view(np.uint32))
+    # end-to-end guarantee through the kernel pair
+    xs = np.asarray(x).ravel()
+    ys = np.asarray(y).ravel()
+    fin = np.isfinite(xs)
+    assert np.all(np.abs(xs[fin].astype(np.float64) - ys[fin]) <= eb)
+    assert np.array_equal(xs[~fin].view(np.uint32), ys[~fin].view(np.uint32))
+
+
+def test_kernel_block_shape_sweep():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-3)
+    x = jnp.asarray(_mix((100_000,)))
+    base = None
+    for rows in (8, 64, 256, 512):
+        k = ops.quantize_abs(x, cfg, rows=rows, interpret=True)
+        got = np.asarray(k.bins)
+        if base is None:
+            base = got
+        else:
+            np.testing.assert_array_equal(got, base)  # tiling-invariant

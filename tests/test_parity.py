@@ -1,0 +1,138 @@
+"""Cross-implementation parity: JAX (XLA:CPU) vs pure numpy — two
+independent compiler stacks must produce bit-identical compressed output.
+This is the testable analogue of the paper's CPU/GPU parity requirement
+(see core/oracle_np.py docstring)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (QuantizerConfig, log2approx, pow2approx, quantize_abs,
+                        quantize_rel)
+from repro.core import oracle_np as onp
+
+RNG = np.random.default_rng(7)
+
+
+def bit_pattern_samples(n=1 << 16):
+    """Uniform over the full uint32 bit space: hits every exponent class,
+    denormals, NaN payloads, infinities."""
+    return RNG.integers(0, 1 << 32, n, dtype=np.uint32).view(np.float32)
+
+
+@pytest.mark.parametrize("eb", [1e-1, 1e-3, 1e-6])
+def test_abs_parity_bit_patterns(eb):
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    x = bit_pattern_samples()
+    jb = quantize_abs(jnp.asarray(x), cfg)
+    nb, no, nr = onp.quantize_abs(x, cfg)
+    np.testing.assert_array_equal(np.asarray(jb.bins), nb)
+    np.testing.assert_array_equal(np.asarray(jb.outlier), no)
+    np.testing.assert_array_equal(
+        np.asarray(jb.recon).view(np.uint32), nr.view(np.uint32))
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-4])
+def test_rel_parity_bit_patterns(eb):
+    cfg = QuantizerConfig(mode="rel", error_bound=eb, bin_bits=32)
+    x = bit_pattern_samples()
+    jb = quantize_rel(jnp.asarray(x), cfg)
+    nb, no, nr, ns = onp.quantize_rel(x, cfg)
+    np.testing.assert_array_equal(np.asarray(jb.bins), nb)
+    np.testing.assert_array_equal(np.asarray(jb.outlier), no)
+    np.testing.assert_array_equal(
+        np.asarray(jb.recon).view(np.uint32), nr.view(np.uint32))
+    np.testing.assert_array_equal(np.asarray(jb.sign), ns)
+
+
+def test_log2_pow2_parity_exhaustive_exponents():
+    """All 254 normal exponent classes x dense mantissa sample x both signs
+    (for pow2: the full log range), bit-for-bit."""
+    mant = RNG.integers(0, 1 << 23, 512, dtype=np.uint32)
+    expo = np.arange(1, 255, dtype=np.uint32)  # normals
+    bits = (expo[:, None] << 23 | mant[None, :]).ravel()
+    x = bits.view(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(log2approx(jnp.asarray(x))).view(np.uint32),
+        onp.log2approx(x).view(np.uint32))
+    lg = onp.log2approx(x)
+    np.testing.assert_array_equal(
+        np.asarray(pow2approx(jnp.asarray(lg))).view(np.uint32),
+        onp.pow2approx(lg).view(np.uint32))
+
+
+def test_ftz_semantics_documented():
+    """Pin the hazard the screens defend against: XLA:CPU flushes denormal
+    results (FTZ) under jit while numpy keeps gradual underflow.  If this
+    test ever fails (XLA stops flushing), the screens are merely
+    conservative — the guarantee is unaffected."""
+    import jax
+
+    prod = jax.jit(lambda a, b: a * b)(jnp.float32(1e-20), jnp.float32(1e-20))
+    assert float(prod) == 0.0            # XLA flushed 1e-40 to zero
+    assert np.float32(1e-20) * np.float32(1e-20) != 0.0  # numpy kept it
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-4])
+def test_rel_parity_denormal_zone(eb):
+    """The zone that originally broke parity: denormals and near-denormal
+    normals must get identical outlier decisions on both stacks."""
+    cfg = QuantizerConfig(mode="rel", error_bound=eb, bin_bits=32)
+    mant = RNG.integers(0, 1 << 23, 2048, dtype=np.uint32)
+    expo = RNG.integers(0, 24, 2048, dtype=np.uint32)  # denormal..2^-104
+    sign = RNG.integers(0, 2, 2048, dtype=np.uint32) << 31
+    x = (sign | (expo << 23) | mant).view(np.float32)
+    jb = quantize_rel(jnp.asarray(x), cfg)
+    nb, no, nr, _ = onp.quantize_rel(x, cfg)
+    np.testing.assert_array_equal(np.asarray(jb.bins), nb)
+    np.testing.assert_array_equal(np.asarray(jb.outlier), no)
+
+
+def test_fma_contraction_documented():
+    """Pin the second hazard class: LLVM contracts mul+add beneath XLA (jit)
+    while eager per-op execution rounds twice — and lax.optimization_barrier
+    does NOT prevent it.  This is why quantization steps are powers of two
+    (bitops module note).  If this test fails, XLA stopped contracting and
+    the pow2 restriction is merely conservative."""
+    import jax
+    from jax import lax
+
+    def chain(b):
+        l = lax.optimization_barrier(b.astype(jnp.float32) *
+                                     jnp.float32(0.014355292543768883))
+        return l + 127.0
+
+    b = jnp.int32(286)
+    eager = np.asarray(chain(b))
+    jitted = np.asarray(jax.jit(chain)(b))
+    assert eager.view(np.uint32) != jitted.view(np.uint32), (
+        "XLA:CPU no longer FMA-contracts through barriers; pow2 steps could "
+        "be relaxed")
+
+
+def test_pow2_step_products_are_exact():
+    """The exactness property the whole no-FMA story rests on: bin * step
+    with a pow2 step is error-free, so jit and eager agree bit-for-bit."""
+    import jax
+
+    cfg = QuantizerConfig(mode="rel", error_bound=1e-2, bin_bits=32)
+    _, log_step, _ = cfg.rel_constants()
+    assert np.float32(log_step).view(np.uint32) & 0x007FFFFF == 0  # pow2
+    bins = jnp.asarray(RNG.integers(-30000, 30000, 4096, dtype=np.int32))
+    f = lambda b: b.astype(jnp.float32) * jnp.float32(log_step) + 127.0
+    np.testing.assert_array_equal(
+        np.asarray(f(bins)).view(np.uint32),
+        np.asarray(jax.jit(f)(bins)).view(np.uint32))
+
+
+def test_library_log_breaks_parity_argument():
+    """Sanity check on the premise: the bit-trick log differs from the
+    library log (so depending on the library WOULD be a parity hazard),
+    while still being within its documented ~0.086 max error."""
+    x = np.abs(bit_pattern_samples())
+    x = x[np.isfinite(x) & (x >= np.finfo(np.float32).tiny)].astype(np.float32)  # normals only: the bit trick reads a wrong exponent on denormals
+    approx = onp.log2approx(x).astype(np.float64)
+    exact = np.log2(x.astype(np.float64))
+    err = np.abs(approx - exact)
+    assert err.max() <= 0.0861
+    assert err.max() > 0.01  # it IS an approximation, not the library fn

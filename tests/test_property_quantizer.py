@@ -1,0 +1,71 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The invariant under test is the paper's headline guarantee: for ANY float32
+input and ANY positive error bound, every decoded value is within the bound
+or bit-identical.  Inputs are drawn from raw bit patterns so every special
+class (denormal/NaN payload/inf/-0) is reachable."""
+import numpy as np
+
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import QuantizerConfig, roundtrip_dense
+from repro.core import oracle_np as onp
+from repro.core.quantizer import quantize_abs, quantize_rel
+
+bit_arrays = st.lists(st.integers(0, (1 << 32) - 1), min_size=1, max_size=256)
+bounds = st.floats(min_value=1e-12, max_value=1e6, allow_nan=False,
+                   allow_infinity=False)
+
+
+def _to_f32(bits):
+    return np.array(bits, dtype=np.uint32).view(np.float32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(bit_arrays, bounds)
+def test_abs_guarantee_holds_for_any_input(bits, eb):
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    x = _to_f32(bits)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    fin = np.isfinite(x)
+    assert np.all(np.abs(x[fin].astype(np.float64) - y[fin].astype(np.float64))
+                  <= eb)
+    assert np.array_equal(x[~fin].view(np.uint32), y[~fin].view(np.uint32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(bit_arrays, st.floats(min_value=1e-7, max_value=0.5))
+def test_rel_guarantee_holds_for_any_input(bits, eb):
+    cfg = QuantizerConfig(mode="rel", error_bound=eb, bin_bits=32)
+    x = _to_f32(bits)
+    y = np.asarray(roundtrip_dense(jnp.asarray(x), cfg))
+    m = np.isfinite(x) & (x != 0)
+    err = np.abs(x[m].astype(np.float64) - y[m].astype(np.float64)) / np.abs(
+        x[m].astype(np.float64))
+    assert np.all(err <= eb)
+    assert np.all(np.signbit(y[m]) == np.signbit(x[m]))
+    assert np.array_equal(x[~m].view(np.uint32), y[~m].view(np.uint32))
+
+
+@settings(max_examples=100, deadline=None)
+@given(bit_arrays, bounds)
+def test_jax_numpy_parity_property(bits, eb):
+    cfg = QuantizerConfig(mode="abs", error_bound=eb)
+    x = _to_f32(bits)
+    jq = quantize_abs(jnp.asarray(x), cfg)
+    nb, no, _ = onp.quantize_abs(x, cfg)
+    assert np.array_equal(np.asarray(jq.bins), nb)
+    assert np.array_equal(np.asarray(jq.outlier), no)
+
+
+@settings(max_examples=100, deadline=None)
+@given(bit_arrays, st.floats(min_value=1e-6, max_value=0.5))
+def test_rel_jax_numpy_parity_property(bits, eb):
+    cfg = QuantizerConfig(mode="rel", error_bound=eb, bin_bits=32)
+    x = _to_f32(bits)
+    jq = quantize_rel(jnp.asarray(x), cfg)
+    nb, no, _, ns = onp.quantize_rel(x, cfg)
+    assert np.array_equal(np.asarray(jq.bins), nb)
+    assert np.array_equal(np.asarray(jq.outlier), no)

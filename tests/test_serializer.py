@@ -1,0 +1,86 @@
+"""Host byte-stream serializer: roundtrip exactness vs the jit codec,
+inline-outlier escape handling, and compression-ratio sanity."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (QuantizerConfig, compression_ratio, decode_dense,
+                        deserialize, encode_dense, serialize)
+
+RNG = np.random.default_rng(3)
+
+
+def smooth_field(n=1 << 14, scale=1.0):
+    """Synthetic scientific-like 1D field: smooth + small noise (compresses
+    like SDRBench climate slices)."""
+    t = np.linspace(0, 8 * np.pi, n)
+    x = np.sin(t) * np.cos(3 * t) + 0.1 * RNG.standard_normal(n)
+    return (x * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("mode,eb", [("abs", 1e-3), ("rel", 1e-3),
+                                     ("noa", 1e-4)])
+def test_serialize_roundtrip_matches_device_decode(mode, eb):
+    cfg = QuantizerConfig(mode=mode, error_bound=eb)
+    x = smooth_field()
+    x[::911] = np.nan
+    x[::713] = np.inf
+    stream = serialize(x, cfg)
+    y, cfg2 = deserialize(stream)
+    assert cfg2.mode == mode and cfg2.bin_bits == cfg.bin_bits
+    if mode != "noa":
+        # Host decode must equal device decode bit-for-bit (parity).
+        dev = np.asarray(decode_dense(encode_dense(jnp.asarray(x), cfg), cfg))
+        np.testing.assert_array_equal(y.view(np.uint32), dev.view(np.uint32))
+    # And the guarantee holds either way.
+    mask = np.isfinite(x)
+    if mode == "abs":
+        assert np.all(np.abs(x[mask].astype(np.float64) - y[mask]) <= eb)
+    elif mode == "rel":
+        m = mask & (x != 0)
+        err = np.abs((x[m].astype(np.float64) - y[m]) / x[m].astype(np.float64))
+        assert np.all(err <= eb)
+    else:
+        r = np.float64(x[mask].max()) - np.float64(x[mask].min())
+        assert np.all(np.abs(x[mask].astype(np.float64) - y[mask]) <= eb * r)
+    nf = ~mask
+    assert np.array_equal(x[nf].view(np.uint32), y[nf].view(np.uint32))
+
+
+def test_compression_ratio_beats_raw_for_smooth_data():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-3)
+    r = compression_ratio(smooth_field(), cfg)
+    assert r > 1.5, f"expected >1.5x on smooth data, got {r:.2f}"
+
+
+def test_ratio_decreases_with_tighter_bound():
+    x = smooth_field()
+    ratios = [compression_ratio(x, QuantizerConfig(mode="abs", error_bound=e))
+              for e in (1e-2, 1e-4, 1e-6)]
+    assert ratios[0] > ratios[1] > ratios[2]
+
+
+def test_all_outlier_stream_roundtrips():
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-3)
+    x = np.full(512, np.nan, np.float32)
+    y, _ = deserialize(serialize(x, cfg))
+    assert np.array_equal(x.view(np.uint32), y.view(np.uint32))
+
+
+def test_escape_code_never_collides_with_valid_bin():
+    # A value that would bin exactly at +maxbin must be an outlier, so the
+    # escape code is unambiguous.
+    cfg = QuantizerConfig(mode="abs", error_bound=0.5, bin_bits=8)
+    x = (np.arange(-300, 300).astype(np.float32))  # bins = x, maxbin = 127
+    stream = serialize(x, cfg)
+    y, _ = deserialize(stream)
+    assert np.all(np.abs(x.astype(np.float64) - y) <= 0.5)
+
+
+@pytest.mark.parametrize("bits", [8, 16, 32])
+def test_bin_widths(bits):
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-2, bin_bits=bits)
+    x = smooth_field(4096)
+    y, _ = deserialize(serialize(x, cfg))
+    assert np.all(np.abs(x.astype(np.float64) - y) <= 1e-2)
