@@ -11,6 +11,7 @@ beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
   ckpt     checkpoint codec ratio (beyond paper)
   kv       KV-cache compression footprint + error (beyond paper)
   gradwire cross-pod gradient wire bytes (beyond paper)
+  packedwire packed vs unpacked wire + codec throughput (beyond paper)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...]
 """
@@ -218,9 +219,10 @@ def ckpt():
 
 
 def kv():
-    """KV-cache quantization: footprint + worst-page error vs bound."""
+    """KV-cache quantization: footprint + worst-page error vs bound, plus
+    the packed wire form a cache migration would ship."""
     from repro.compression.kv import (dequantize_kv, kv_quantizer_config,
-                                      quantize_kv)
+                                      kv_wire_bytes, pack_kv, quantize_kv)
     r = np.random.default_rng(1)
     k = jnp.asarray(r.standard_normal((2, 4, 1024, 128)).astype(np.float32))
     cfg = kv_quantizer_config()
@@ -234,21 +236,87 @@ def kv():
     err = float(jnp.max(jnp.abs(k - y)))
     _emit("kv.int8+outliers", us,
           f"{k.size * 4 / comp:.2f}x max_err={err:.4f}")
+    p = pack_kv(q)
+    assert p.nbytes() == kv_wire_bytes(k.shape)
+    _emit("kv.packed_wire", 0.0,
+          f"{k.size * 4 / p.nbytes():.2f}x vs f32 on the wire")
 
 
 def gradwire():
-    """Cross-pod gradient wire bytes: compressed vs f32 psum."""
-    from repro.compression.grads import GradCompressionConfig, wire_bytes
+    """Cross-pod gradient wire bytes: packed-words wire vs f32 psum.
+    wire_bytes is the MEASURED footprint of CompressedShard (what the
+    all-gather moves), not an estimate."""
+    from repro.compression.grads import (CompressedShard,  # noqa: F401
+                                         GradCompressionConfig, compress_shard,
+                                         wire_bytes)
     cfg = GradCompressionConfig()
     n = 1 << 24
-    _emit("gradwire.int8+outliers", 0.0,
+    shard, _ = compress_shard(jnp.zeros((n,), jnp.float32), cfg)
+    assert shard.nbytes() == wire_bytes(n, cfg)
+    _emit("gradwire.packed+outliers", 0.0,
           f"{n * 4 / wire_bytes(n, cfg):.2f}x less traffic")
+
+
+def packedwire():
+    """Packed vs unpacked codec pipeline and wire.
+
+    Honest accounting: encode_compact already narrows bins to bin_bits
+    DEVICE-side, so at bin_bits in {8, 16} the packed uint32 words are
+    byte-parity with the narrowed bins on the wire (reported below as a
+    check, ~1.0x).  What the fused pipeline buys instead:
+      * pipeline HBM: the seed quantize kernel emitted int32 bins + bool
+        outlier + f32 recon planes (9 B/elem) and narrowing was a separate
+        XLA pass; fused quantize+pack emits words + bool (bb/8 + 1 B/elem)
+        in ONE pass.
+      * wire vs f32 psum: the headline gradient-compression ratio.
+      * REL sign plane: 1 bit/value packed vs XLA's byte-wide bool (8x).
+    Also times the jitted encode paths — the pack must ride under the same
+    memory stream (pack/nopack ~ 1.0).
+    """
+    from repro.core import (decode_packed, encode_compact, encode_packed,
+                            packed_word_count)
+    r = np.random.default_rng(3)
+    n = 1 << 22
+    x = jnp.asarray((r.standard_normal(n) * 0.02).astype(np.float32))
+    for bb in (8, 16):
+        cfg = QuantizerConfig(mode="abs", error_bound=1e-4, bin_bits=bb,
+                              outlier_cap_frac=1 / 64)
+        k = cfg.outlier_cap(n)
+        f_un = jax.jit(lambda v, c=cfg: encode_compact(v, c))
+        f_pk = jax.jit(lambda v, c=cfg: encode_packed(v, c))
+        f_rt = jax.jit(lambda v, c=cfg: decode_packed(encode_packed(v, c),
+                                                      c, n=v.size))
+        t_un = _time(f_un, x)
+        t_pk = _time(f_pk, x)
+        t_rt = _time(f_rt, x)
+        seed_hbm = n * (4 + 1 + 4)                 # int32 + bool + f32 recon
+        fused_hbm = n * bb // 8 + n                # packed words + bool
+        compact_wire = n * bb // 8 + k * 8 + 4     # narrowed bins + table
+        pk_bytes = packed_word_count(n, bb) * 4 + k * 8 + 8
+        _emit(f"packedwire.abs.bb{bb}", t_pk * 1e6,
+              f"pipeline_hbm {seed_hbm / fused_hbm:.2f}x less "
+              f"wire {n * 4 / pk_bytes:.2f}x vs f32 "
+              f"(parity vs narrowed-compact {compact_wire / pk_bytes:.2f}x) "
+              f"enc={x.size * 4 / t_pk / 1e9:.2f}GB/s "
+              f"pack/nopack={t_pk / t_un:.3f} roundtrip={t_rt * 1e6:.0f}us")
+    cfg = QuantizerConfig(mode="rel", error_bound=1e-3, bin_bits=16,
+                          outlier_cap_frac=1 / 8)
+    k = cfg.outlier_cap(n)
+    f_pk = jax.jit(lambda v: encode_packed(v, cfg))
+    t_pk = _time(f_pk, x)
+    pk_bytes = (packed_word_count(n, 16) * 4
+                + packed_word_count(n, 1) * 4 + k * 8 + 8)
+    unpacked_sign = n * 2 + n + k * 8 + 4          # int16 + byte-wide bool sign
+    _emit("packedwire.rel.bb16", t_pk * 1e6,
+          f"{n * 4 / pk_bytes:.2f}x vs f32, sign plane 8x (1bit vs bool: "
+          f"wire {unpacked_sign / pk_bytes:.2f}x smaller) "
+          f"enc={x.size * 4 / t_pk / 1e9:.2f}GB/s")
 
 
 TABLES = {
     "table3": table3, "table4": table4, "table56": table56,
     "table7": table7, "table8": table8, "table9": table9,
-    "ckpt": ckpt, "kv": kv, "gradwire": gradwire,
+    "ckpt": ckpt, "kv": kv, "gradwire": gradwire, "packedwire": packedwire,
 }
 
 

@@ -1,14 +1,18 @@
 """Guaranteed-error-bounded gradient compression for the cross-pod
 all-reduce — the paper's quantizer on the slowest wire in the system.
 
-Design (DESIGN.md §2/§5):
+Design (DESIGN.md §2/§4/§5):
   * Within a pod, gradients reduce over the fast 'data'/'model' axes in
     full precision (GSPMD handles those — the links are wide).
   * Across pods, each pod quantizes its pod-local gradient with the ABS
-    quantizer (per-tensor NOA-style bound eb = eb_rel * rms(g)), ships
-    int8 bins + the capped exact-outlier table, dequantizes the peers'
-    payloads, and averages.  Wire traffic drops ~3.9x (int8 + sides) vs
-    f32.
+    quantizer (per-tensor NOA-style bound eb = eb_rel * rms(g)) and ships
+    the PACKED wire format: bin_bits-wide bins bit-packed into uint32
+    lanes (core.codec.pack_words — same layout the fused Pallas pipeline
+    in kernels/pack.py emits) plus the capped exact-outlier (idx, payload)
+    table.  Peers unpack, dequantize, and average.  Nothing wider than the
+    packed words crosses the collective — `wire_bytes` below is the real
+    measured footprint, ~3.6x less traffic than an f32 psum at bin_bits=8
+    with the 1/64 outlier cap (benchmarks/run.py gradwire).
   * ERROR FEEDBACK: the residual g - shipped is carried to the next step,
     so the long-run update is unbiased.  The paper's guarantee bounds the
     per-step residual ELEMENTWISE: |e_i| <= eb (outliers ship exactly, so
@@ -20,8 +24,8 @@ Design (DESIGN.md §2/§5):
     dropped (the paper's core discipline).
 
 These functions use explicit collectives over the 'pod' axis and are
-called INSIDE a partial-manual shard_map (axis_names={'pod'}) set up by
-launch/train.py; 'data'/'model' sharding stays with GSPMD.
+called INSIDE a shard_map set up by launch/train.py; 'data'/'model'
+sharding stays with GSPMD.
 """
 from __future__ import annotations
 
@@ -30,7 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantizerConfig
+from repro.core import QuantizerConfig, codec
 from repro.core.bitops import bits_to_float, float_to_bits
 from repro.core.quantizer import dequantize_abs, quantize_abs
 
@@ -47,13 +51,24 @@ class GradCompressionConfig(NamedTuple):
                                outlier_cap_frac=self.outlier_cap_frac)
 
 
-_BIN_DT = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+class CompressedShard(NamedTuple):
+    """One pod's wire payload — exactly the arrays the all-gather moves."""
+    words: jnp.ndarray       # uint32[n_words] packed bins
+    out_idx: jnp.ndarray     # int32[K], n = empty
+    out_payload: jnp.ndarray  # uint32[K] exact IEEE bits
+    eb: jnp.ndarray          # f32 scalar per-tensor bound
+    n_outliers: jnp.ndarray  # int32 scalar (header; not gathered)
+
+    def nbytes(self) -> int:
+        """Measured per-pod wire footprint of one all-gather."""
+        return (self.words.size * 4 + self.out_idx.size * 4
+                + self.out_payload.size * 4 + 4 + 4)
 
 
-def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
-    """Compressed mean of g over the `axis` collective (call inside
-    shard_map).  Returns (mean, residual) — residual is THIS shard's
-    error-feedback term, elementwise bounded by eb."""
+def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig):
+    """Quantize + pack one pod-local gradient.  Returns (CompressedShard,
+    Quantized) — the second carries outlier/recon planes that stay LOCAL
+    (residual bookkeeping); only the shard's arrays go on the wire."""
     qc = cfg.qcfg()
     flat = g.reshape(-1).astype(jnp.float32)
     n = flat.size
@@ -66,25 +81,44 @@ def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
     (idx,) = jnp.nonzero(q.outlier, size=k, fill_value=n)
     payload = jnp.where(idx < n,
                         float_to_bits(flat)[jnp.minimum(idx, n - 1)], 0)
+    words = codec.pack_words(q.bins, cfg.bin_bits)
+    shard = CompressedShard(words, idx.astype(jnp.int32),
+                            payload.astype(jnp.uint32), eb, n_out)
+    return shard, q
+
+
+def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
+    """Compressed mean of g over the `axis` collective (call inside
+    shard_map).  Returns (mean, residual) — residual is THIS shard's
+    error-feedback term, elementwise bounded by eb."""
+    qc = cfg.qcfg()
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    k = max(1, int(n * cfg.outlier_cap_frac))
+    shard, q = compress_shard(g, cfg)
     # all pods must take the same branch: agree by pmax
-    any_overflow = jax.lax.pmax((n_out > k).astype(jnp.int32), axis) > 0
-    p = jax.lax.axis_size(axis)
+    any_overflow = jax.lax.pmax((shard.n_outliers > k).astype(jnp.int32),
+                                axis) > 0
+    p = jax.lax.psum(1, axis)        # axis size (jax.lax.axis_size compat)
 
     def compressed_path(_):
-        bins = q.bins.astype(_BIN_DT[cfg.bin_bits])
-        bins_all = jax.lax.all_gather(bins, axis)            # int8 wire
-        eb_all = jax.lax.all_gather(eb, axis)
-        idx_all = jax.lax.all_gather(idx, axis)
-        pay_all = jax.lax.all_gather(payload, axis)
+        words_all = jax.lax.all_gather(shard.words, axis)    # uint32 wire
+        eb_all = jax.lax.all_gather(shard.eb, axis)
+        idx_all = jax.lax.all_gather(shard.out_idx, axis)
+        pay_all = jax.lax.all_gather(shard.out_payload, axis)
 
-        def dequant_one(b8, e, ii, pp):
-            vals = dequantize_abs(b8.astype(jnp.int32), qc, eb=e,
-                                  dtype=jnp.float32)
-            exact = bits_to_float(pp, jnp.float32)
-            safe = jnp.minimum(ii, n - 1)
-            return vals.at[safe].set(jnp.where(ii < n, exact, vals[safe]))
+        def dequant_one(w, e, ii, pp):
+            bins = codec.unpack_words(w, n, cfg.bin_bits)
+            vals = dequantize_abs(bins, qc, eb=e, dtype=jnp.float32)
+            exact = bits_to_float(pp.astype(jnp.int32), jnp.float32)
+            # mode='drop' discards empty slots (ii == n).  NEVER clamp them
+            # to n-1: an outlier at the last index would be clobbered by
+            # the empties' duplicate writes and decode as 0 — a silent
+            # guarantee violation (the residual for outliers is 0, so
+            # error feedback would not recover it either).
+            return vals.at[ii].set(exact, mode="drop")
 
-        return jnp.sum(jax.vmap(dequant_one)(bins_all, eb_all, idx_all,
+        return jnp.sum(jax.vmap(dequant_one)(words_all, eb_all, idx_all,
                                              pay_all), axis=0)
 
     def lossless_path(_):
@@ -113,6 +147,8 @@ def compressed_mean_tree(grads, residuals, cfg: GradCompressionConfig,
 
 
 def wire_bytes(n_elems: int, cfg: GradCompressionConfig) -> int:
-    """Analytic wire footprint per pod per tensor (for EXPERIMENTS.md)."""
+    """Wire footprint per pod per tensor — matches CompressedShard.nbytes()
+    exactly (packed uint32 words + capped (idx, payload) table + header)."""
+    n_words = codec.packed_word_count(n_elems, cfg.bin_bits)
     k = max(1, int(n_elems * cfg.outlier_cap_frac))
-    return n_elems * cfg.bin_bits // 8 + k * 8 + 4
+    return n_words * 4 + k * 8 + 8

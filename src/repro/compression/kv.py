@@ -22,6 +22,17 @@ an attention-sink token) would be an unbounded output error.
 
 Memory: int8 bins + f32 scale/page + cap*(idx+val) -> ~4x smaller than f32
 KV at page=128, cap=8 (25.6% of bf16).
+
+Two representations:
+
+  * QuantizedKV — int8 bins [..., S, D]: the DECODE layout.  The Pallas
+    attention kernel (kernels/kv_attention.py) streams these blocks
+    directly; int8 lanes are what the VPU dequantizes cheapest.
+  * PackedKV — the WIRE layout (DESIGN.md §4): per-page bins bit-packed
+    into uint32 lanes via core.codec.pack_words.  This is what cache
+    migration / prefill->decode disaggregation ships between hosts;
+    pack_kv/unpack_kv round-trip bit-exactly, and `kv_wire_bytes` is the
+    measured footprint of exactly those arrays.
 """
 from __future__ import annotations
 
@@ -30,7 +41,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantizerConfig
+from repro.core import QuantizerConfig, codec
 from repro.core.bitops import pow2_floor
 from repro.core.quantizer import quantize_abs
 
@@ -106,6 +117,65 @@ def dequantize_kv(q: QuantizedKV, *, page: int = 128,
 
     out = jax.vmap(one)(flat_r, flat_i, flat_v.astype(dtype))
     return out.reshape(*lead, S, D)
+
+
+class PackedKV(NamedTuple):
+    """Wire form of QuantizedKV: bins bit-packed 4/word into uint32 lanes.
+    Everything here is what a cache transfer actually moves."""
+    words: jnp.ndarray     # uint32 [..., n_pages, page*D // 4]
+    eb2: jnp.ndarray       # f32   [..., n_pages]
+    out_idx: jnp.ndarray   # int32 [..., n_pages, cap]
+    out_val: jnp.ndarray   # f32   [..., n_pages, cap]
+    overflow: jnp.ndarray  # bool  [..., n_pages]
+
+    def nbytes(self) -> int:
+        return (self.words.size * 4 + self.eb2.size * 4
+                + self.out_idx.size * 4 + self.out_val.size * 4
+                + self.overflow.size)
+
+
+def pack_kv(q: QuantizedKV, *, page: int = 128) -> PackedKV:
+    """Bit-pack a quantized cache for the wire.  Requires page*D % 512 == 0
+    (whole uint32 tiles per page; page=128 needs D % 4 == 0)."""
+    *lead, s, d = q.bins.shape
+    n_pages = s // page
+    per = page * d
+    assert per % (4 * codec.PACK_LANES) == 0, (page, d)
+    flat = q.bins.reshape(-1, per).astype(jnp.int32)
+    words = jax.vmap(lambda b: codec.pack_words(b, 8))(flat)
+    return PackedKV(words.reshape(*lead, n_pages, per // 4), q.eb2,
+                    q.out_idx, q.out_val, q.overflow)
+
+
+def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
+    """Inverse of pack_kv (bit-exact): restore the int8 decode layout."""
+    *lead, n_pages, wpp = p.words.shape
+    per = wpp * 4
+    d = per // page
+    flat = p.words.reshape(-1, wpp)
+    bins = jax.vmap(lambda w: codec.unpack_words(w, per, 8))(flat)
+    bins = bins.astype(jnp.int8).reshape(*lead, n_pages * page, d)
+    return QuantizedKV(bins, p.eb2, p.out_idx, p.out_val, p.overflow)
+
+
+def gather_kv_packed(p: PackedKV, axis: str) -> PackedKV:
+    """All-gather a packed cache over a mesh axis (prefill->decode
+    disaggregation: every decode host receives every prefill shard's pages
+    in wire form).  Call inside shard_map; leading axis of every field
+    becomes the axis size."""
+    g = lambda a: jax.lax.all_gather(a, axis)
+    return PackedKV(g(p.words), g(p.eb2), g(p.out_idx), g(p.out_val),
+                    g(p.overflow))
+
+
+def kv_wire_bytes(shape, *, page: int = 128, cap: int = 8) -> int:
+    """Analytic wire footprint of pack_kv for a cache of `shape`
+    [..., S, D] — matches PackedKV.nbytes() exactly."""
+    *lead, s, d = shape
+    import math
+    n_lead = math.prod(lead) if lead else 1
+    n_pages = s // page
+    return n_lead * n_pages * ((page * d // 4) * 4 + 4 + cap * 8 + 1)
 
 
 def kv_error_bound_holds(x, q: QuantizedKV, cfg: QuantizerConfig, *,

@@ -10,8 +10,11 @@ Public API:
     log2approx/pow2approx       — parity-safe transcendental replacements
 """
 from .bitops import bits_to_float, float_to_bits, log2approx, pow2approx
-from .codec import (EncodedCompact, EncodedDense, decode_compact, decode_dense,
-                    encode_compact, encode_dense, roundtrip_dense)
+from .codec import (EncodedCompact, EncodedDense, EncodedPacked,
+                    decode_compact, decode_dense, decode_packed,
+                    encode_compact, encode_dense, encode_packed, pack_flags,
+                    pack_words, packed_word_count, roundtrip_dense,
+                    unpack_flags, unpack_words)
 from .config import QuantizerConfig
 from .quantizer import (Quantized, dequantize_abs, dequantize_rel, quantize,
                         quantize_abs, quantize_abs_unprotected, quantize_noa,
@@ -22,7 +25,10 @@ __all__ = [
     "QuantizerConfig", "Quantized", "quantize", "quantize_abs", "quantize_rel",
     "quantize_noa", "quantize_abs_unprotected", "quantize_rel_library",
     "dequantize_abs", "dequantize_rel", "encode_dense", "decode_dense",
-    "encode_compact", "decode_compact", "roundtrip_dense", "EncodedDense",
-    "EncodedCompact", "serialize", "deserialize", "compression_ratio",
+    "encode_compact", "decode_compact", "encode_packed", "decode_packed",
+    "pack_words", "unpack_words", "pack_flags", "unpack_flags",
+    "packed_word_count", "roundtrip_dense", "EncodedDense",
+    "EncodedCompact", "EncodedPacked", "serialize", "deserialize",
+    "compression_ratio",
     "log2approx", "pow2approx", "float_to_bits", "bits_to_float",
 ]

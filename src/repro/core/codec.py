@@ -5,17 +5,22 @@ host byte stream (serializer.py) while preserving the paper's semantics:
 outliers live WITH the bins (same index space — LC's inline placement, not
 SZ3's side list), stored bit-exactly so NaN payloads / -0.0 / INF survive.
 
-Two layouts:
+Three layouts:
 
   * DENSE  — bins + outlier payload at every index (payload 0 where not
     outlier).  Reference layout; wire-size = bins + full payload, used where
     simplicity beats size (activation offload, tests).
   * COMPACT — bins + (idx, payload) arrays capped at K = ceil(frac * n).
-    This is what goes over the pod axis for gradient compression.  If the
-    outlier count exceeds K the tensor CANNOT be represented within the
-    bound — encode reports `overflow` and callers must take the lossless
-    path (compression/grads.py does this with a psum-agreed lax.cond).  The
-    guarantee is never silently dropped.
+    If the outlier count exceeds K the tensor CANNOT be represented within
+    the bound — encode reports `overflow` and callers must take the
+    lossless path (compression/grads.py does this with a psum-agreed
+    lax.cond).  The guarantee is never silently dropped.
+  * PACKED — COMPACT with the bins bit-packed into uint32 lanes (and the
+    REL sign plane packed at 1 bit/value).  This is the wire format the
+    collectives actually move (compression/grads.py); pack/unpack here are
+    the jit-safe lax shift/or reference paths, bit-exact oracles for the
+    fused Pallas kernels in kernels/pack.py.  Layout documented in
+    DESIGN.md §4 and under pack_words below.
 
 Bin storage width is cfg.bin_bits; bins are produced as int32 and narrowed
 here (safe: the quantizer's range check already confined them to
@@ -127,3 +132,153 @@ def decode_compact(enc: EncodedCompact, cfg: QuantizerConfig, shape=None,
 def roundtrip_dense(x: jnp.ndarray, cfg: QuantizerConfig):
     """Encode+decode; the decoded result carries the full guarantee."""
     return decode_dense(encode_dense(x, cfg), cfg, shape=x.shape)
+
+
+# ---------------------------------------------------------------------------
+# PACKED layout — bins bit-packed into uint32 lanes (the device wire format)
+# ---------------------------------------------------------------------------
+#
+# Word layout (little-endian within a word, lane-tiled across words): the
+# flat stream is padded with zeros to a whole number of TILES of
+# vpw * PACK_LANES elements (vpw = 32 // bin_bits values per word), viewed
+# row-major as [R, PACK_LANES], and word row w packs element rows
+# w*vpw .. w*vpw+vpw-1: element [w*vpw + i, lane] occupies bits
+# [i*bin_bits, (i+1)*bin_bits) of word [w, lane].  Bins are stored as
+# bin_bits-wide two's complement (lossless: the quantizer confined them to
+# (-maxbin, maxbin)).  Grouping rows instead of adjacent lanes keeps the
+# pack a pure sublane shift/or on the TPU VPU, and makes the layout
+# identical for any kernel block height that is a multiple of vpw — the
+# Pallas kernels and this reference produce bit-identical words.
+
+PACK_LANES = 128          # lane width of the packed tile (VPU native)
+_PACK_WIDTHS = (1, 8, 16, 32)
+
+
+def packed_word_count(n: int, bin_bits: int) -> int:
+    """Number of uint32 words `pack_words` emits for n elements."""
+    vpw = 32 // bin_bits
+    tile = vpw * PACK_LANES
+    return -(-n // tile) * PACK_LANES
+
+
+def pack_words(values: jnp.ndarray, bin_bits: int) -> jnp.ndarray:
+    """Pack flat int values into uint32 words (layout in the module note).
+
+    values: int32/uint32[n] with each value representable in bin_bits
+    (two's complement).  Returns uint32[packed_word_count(n, bin_bits)].
+    jit-safe: pure reshape + shift/or reduction, no gathers.
+    """
+    if bin_bits not in _PACK_WIDTHS:
+        raise ValueError(f"bin_bits must be one of {_PACK_WIDTHS}")
+    vpw = 32 // bin_bits
+    n = values.shape[0]
+    n_words = packed_word_count(n, bin_bits)
+    u = values.astype(jnp.uint32)
+    if bin_bits != 32:
+        u = u & jnp.uint32((1 << bin_bits) - 1)
+    u = jnp.pad(u, (0, n_words * vpw - n))
+    grp = u.reshape(-1, vpw, PACK_LANES)
+    word = grp[:, 0, :]
+    for i in range(1, vpw):
+        word = word | (grp[:, i, :] << jnp.uint32(i * bin_bits))
+    return word.reshape(-1)
+
+
+def unpack_words(words: jnp.ndarray, n: int, bin_bits: int,
+                 signed: bool = True) -> jnp.ndarray:
+    """Inverse of pack_words.  Returns int32[n] (sign-extended) or
+    uint32[n] when signed=False."""
+    vpw = 32 // bin_bits
+    w = words.reshape(-1, PACK_LANES)
+    if vpw == 1:
+        flat = w.reshape(-1)[:n]
+    else:
+        mask = jnp.uint32((1 << bin_bits) - 1)
+        cols = [(w >> jnp.uint32(i * bin_bits)) & mask for i in range(vpw)]
+        flat = jnp.stack(cols, axis=1).reshape(-1)[:n]
+    if not signed:
+        return flat
+    if bin_bits == 32:
+        return flat.astype(jnp.int32)
+    sh = jnp.int32(32 - bin_bits)
+    return (flat.astype(jnp.int32) << sh) >> sh     # arithmetic sign-extend
+
+
+def pack_flags(flags: jnp.ndarray) -> jnp.ndarray:
+    """bool[n] -> uint32[ceil-to-tile(n/32)] at 1 bit/value (sign plane)."""
+    return pack_words(flags.astype(jnp.uint32), 1)
+
+
+def unpack_flags(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    return unpack_words(words, n, 1, signed=False).astype(bool)
+
+
+class EncodedPacked(NamedTuple):
+    """COMPACT with device-side bit-packed bins — the actual wire format.
+
+    Everything here is what crosses the collective: uint32 words, the
+    capped exact-outlier table, and an 8-byte header (n_outliers/overflow +
+    eb).  No full-width bins, no bool plane, no recon plane.
+    """
+    words: jnp.ndarray        # uint32[n_words] — bin_bits-wide packed bins
+    out_idx: jnp.ndarray      # int32[K], n = "empty slot"
+    out_payload: jnp.ndarray  # uint32[K] — original IEEE bits, bit-exact
+    n_outliers: jnp.ndarray   # int32 scalar
+    overflow: jnp.ndarray     # bool scalar: n_outliers > K (bound NOT met)
+    sign_words: jnp.ndarray | None  # uint32[n_sign_words] (REL only)
+    eb: jnp.ndarray | None    # traced scalar bound (NOA / per-tensor eb)
+
+    def wire_bits(self, cfg: QuantizerConfig | None = None) -> int:
+        """Static wire size in bits — exactly the bytes the collective
+        moves, tile padding included.  vs EncodedCompact (whose bins are
+        also bin_bits-wide): the sign plane is 1 bit/value instead of a
+        byte-wide bool, and everything rides uint32 lanes."""
+        bits = 32 * self.words.shape[0]
+        bits += self.out_idx.shape[0] * (32 + 32)
+        if self.sign_words is not None:
+            bits += 32 * self.sign_words.shape[0]
+        return bits + 64                     # n_outliers/overflow + eb header
+
+
+def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> EncodedPacked:
+    """Quantize + bit-pack in one jit-safe call (reference path; the fused
+    Pallas pipeline in kernels/pack.py is its bit-exact device twin)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = cfg.outlier_cap(n)
+    if cfg.mode == "abs":
+        qt = q.quantize_abs(flat, cfg, eb=eb)
+    elif cfg.mode == "rel":
+        qt = q.quantize_rel(flat, cfg)
+    else:
+        qt, eb = q.quantize_noa(flat, cfg)
+    n_out = jnp.sum(qt.outlier).astype(jnp.int32)
+    (idx,) = jnp.nonzero(qt.outlier, size=k, fill_value=n)
+    safe_idx = jnp.minimum(idx, n - 1)
+    payload = jnp.where(idx < n, float_to_bits(flat)[safe_idx], 0)
+    words = pack_words(qt.bins, cfg.bin_bits)
+    sign_words = None if qt.sign is None else pack_flags(qt.sign)
+    return EncodedPacked(words, idx.astype(jnp.int32),
+                         payload.astype(jnp.uint32), n_out, n_out > k,
+                         sign_words,
+                         None if eb is None else jnp.asarray(eb, flat.dtype))
+
+
+def decode_packed(enc: EncodedPacked, cfg: QuantizerConfig, n: int | None = None,
+                  shape=None, dtype=None):
+    """Unpack + dequantize + exact outlier restore.  `n` (or `shape`) gives
+    the true element count — the packed stream carries pad words."""
+    if n is None:
+        if shape is None:
+            raise ValueError("decode_packed needs n or shape")
+        n = int(np.prod(shape))
+    dt = jnp.dtype(dtype or cfg.dtype)
+    bins = unpack_words(enc.words, n, cfg.bin_bits)
+    if cfg.mode == "rel":
+        sign = unpack_flags(enc.sign_words, n)
+        recon = q.dequantize_rel(bins, sign, cfg, dtype=dt)
+    else:
+        recon = q.dequantize_abs(bins, cfg, eb=enc.eb, dtype=dt)
+    vals = bits_to_float(enc.out_payload.astype(jnp.int32), dt)
+    recon = recon.at[enc.out_idx].set(vals, mode="drop")
+    return recon.reshape(shape) if shape is not None else recon

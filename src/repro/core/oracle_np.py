@@ -61,14 +61,25 @@ def quantize_abs(x: np.ndarray, cfg: QuantizerConfig, eb=None):
 
     finite = np.isfinite(x)
     xs = np.where(finite, x, dt.type(0))
+    # Mask magnitudes whose xs * inv_eb2 would overflow before multiplying.
+    # eb2 is a power of two, so the scaling is EXACT: |xs| <= max * eb2 iff
+    # the product fits, and anything above it is a range outlier anyway
+    # (|bin| would far exceed maxbin).  The decision is bit-identical to
+    # the unmasked JAX path; this only silences the spurious overflow
+    # RuntimeWarning, which would otherwise bury real regressions.
+    thr = dt.type(min(float(np.finfo(dt).max) * float(eb2),
+                      float(np.finfo(dt).max)))
+    huge = np.abs(xs) > thr
+    xs = np.where(huge, dt.type(0), xs)
     bin_f = np.rint(xs * inv_eb2)
-    range_bad = np.abs(bin_f) >= dt.type(maxbin)
+    range_bad = huge | (np.abs(bin_f) >= dt.type(maxbin))
     with np.errstate(invalid="ignore"):
         bin_i = np.where(range_bad, 0, bin_f).astype(np.int32)
     range_bad_i = (bin_i >= maxbin) | (bin_i <= -maxbin)
     recon = bin_i.astype(dt) * eb2
-    with np.errstate(invalid="ignore"):
+    with np.errstate(invalid="ignore", over="ignore"):
         fails = ~(np.abs(x - recon) <= eb * dt.type(cfg.tighten))
+    fails |= ~np.isfinite(recon)       # recon-overflow guard (see quantizer.py)
     outlier = (~finite) | range_bad | range_bad_i | fails | degenerate
     bins = np.where(outlier, 0, bin_i)
     recon = np.where(outlier, dt.type(0), recon)

@@ -108,6 +108,13 @@ def quantize_abs(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> Quantized:
     diff = jnp.abs(x - recon)
     bound = eb_ * jnp.asarray(cfg.tighten, dt)
     fails_check = ~(diff <= bound)                         # True for NaN diff too
+    # The exactness argument breaks at the overflow boundary: if bin*eb2
+    # exceeds the dtype max (huge NOA eb on near-max values), the unfused
+    # product is INF but a contracted x - bin*eb2 is computed in extended
+    # precision and can come out small — the check would wrongly ACCEPT a
+    # value that decodes to INF.  Rejecting on the standalone product is
+    # contraction-proof (exact-or-inf, deterministically).
+    fails_check |= ~jnp.isfinite(recon)
 
     outlier = (~finite) | range_bad | range_bad_i | fails_check
     if degenerate is not None:

@@ -53,6 +53,7 @@ def _kernel(x_ref, eb_ref, bins_ref, out_ref, recon_ref, *, maxbin, tighten,
 
     recon = bin_i.astype(dt) * eb2               # exact (pow2 step)
     fails = ~(jnp.abs(x - recon) <= eb * jnp.asarray(tighten, dt))
+    fails |= ~jnp.isfinite(recon)    # recon-overflow guard (see quantizer.py)
     outlier = (~finite) | range_bad | range_bad_i | fails | degenerate
 
     bins_ref[...] = jnp.where(outlier, 0, bin_i)

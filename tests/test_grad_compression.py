@@ -24,8 +24,28 @@ SCRIPT = textwrap.dedent("""
                                          compressed_mean,
                                          compressed_mean_tree)
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    # Version compat: jax.sharding.AxisType and the public jax.shard_map
+    # (with axis_names/check_vma) only exist on newer JAX.  Older releases
+    # get an explicit-Mesh + full-manual jax.experimental shard_map (the
+    # unused data/model axes are simply manual-and-idle there).
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    else:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+    if hasattr(jax, "shard_map"):
+        def smap(f, in_specs, out_specs):
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, axis_names={"pod"},
+                                 check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def smap(f, in_specs, out_specs):
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
     cfg = GradCompressionConfig(eb_rel=2.0 ** -8, bin_bits=8,
                                 outlier_cap_frac=1 / 16)
 
@@ -38,10 +58,8 @@ SCRIPT = textwrap.dedent("""
         mean, resid = compressed_mean(g, cfg, "pod")
         return mean, resid
 
-    mapped = jax.shard_map(podwise, mesh=mesh,
-                           in_specs=P("pod", None),
-                           out_specs=(P("pod", None), P("pod", None)),
-                           axis_names={"pod"}, check_vma=False)
+    mapped = smap(podwise, P("pod", None),
+                  (P("pod", None), P("pod", None)))
     gd = jax.device_put(jnp.asarray(g_global),
                         NamedSharding(mesh, P("pod", None)))
     mean, resid = jax.jit(mapped)(gd)
@@ -72,10 +90,8 @@ SCRIPT = textwrap.dedent("""
     cfg2 = GradCompressionConfig(eb_rel=2.0 ** -16, bin_bits=8,
                                  outlier_cap_frac=1 / 256)
     g2d = jax.device_put(jnp.asarray(g2), NamedSharding(mesh, P("pod", None)))
-    mapped2 = jax.shard_map(lambda g: compressed_mean(g, cfg2, "pod"),
-                            mesh=mesh, in_specs=P("pod", None),
-                            out_specs=(P("pod", None), P("pod", None)),
-                            axis_names={"pod"}, check_vma=False)
+    mapped2 = smap(lambda g: compressed_mean(g, cfg2, "pod"),
+                   P("pod", None), (P("pod", None), P("pod", None)))
     m2, r2 = jax.jit(mapped2)(g2d)
     m2 = np.asarray(m2)
     np.testing.assert_allclose(m2[0], g2.mean(0), rtol=1e-6)  # lossless
@@ -85,12 +101,10 @@ SCRIPT = textwrap.dedent("""
     # tree version with error feedback accumulates unbiased-ly
     tree = {"a": jnp.asarray(g_global), "b": jnp.asarray(g_global * 0.5)}
     resid0 = jax.tree.map(jnp.zeros_like, tree)
-    mapped3 = jax.shard_map(
+    mapped3 = smap(
         lambda t, r: compressed_mean_tree(t, r, cfg, "pod"),
-        mesh=mesh,
-        in_specs=({"a": P("pod", None), "b": P("pod", None)},) * 2,
-        out_specs=({"a": P("pod", None), "b": P("pod", None)},) * 2,
-        axis_names={"pod"}, check_vma=False)
+        ({"a": P("pod", None), "b": P("pod", None)},) * 2,
+        ({"a": P("pod", None), "b": P("pod", None)},) * 2)
     tree_d = jax.tree.map(lambda x: jax.device_put(
         x, NamedSharding(mesh, P("pod", None))), tree)
     m3, r3 = jax.jit(mapped3)(tree_d, resid0)

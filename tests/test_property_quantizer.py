@@ -5,7 +5,9 @@ input and ANY positive error bound, every decoded value is within the bound
 or bit-identical.  Inputs are drawn from raw bit patterns so every special
 class (denormal/NaN payload/inf/-0) is reachable."""
 import numpy as np
+import pytest
 
+pytest.importorskip("hypothesis")   # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
