@@ -79,6 +79,49 @@ SUITES = {
 }
 
 
+# --- gradient-shaped inputs for the wire benchmarks (lossless stage) ------
+#
+# Real training gradients are row/channel-structured: a few rows carry the
+# signal and the rest sit at the noise floor, far inside the quantizer's
+# zero bin.  These generators span that spectrum so the lossless stage's
+# zero-chunk/narrow wins (and its ~1x floor on dense data) are measured on
+# representative shapes, not cherry-picked ones.
+
+def grad_smooth():
+    """Post-warmup dense-layer gradient: per-row scales, ~10% live rows,
+    dead rows at the numerical noise floor (quantize to the zero bin)."""
+    r = _rng("gradsmooth")
+    rows = 2048
+    live = r.random(rows) < 0.10
+    scale = np.where(live, 3e-3, 1e-7).astype(np.float32)
+    g = r.standard_normal((rows, N // rows)).astype(np.float32)
+    return (g * scale[:, None]).ravel()
+
+
+def grad_sparse():
+    """Embedding-table gradient: ~1% of rows touched, the rest exactly
+    zero (the classic sparse all-reduce workload)."""
+    r = _rng("gradsparse")
+    rows = 8192
+    g = np.zeros((rows, N // rows), np.float32)
+    touched = r.choice(rows, rows // 100, replace=False)
+    g[touched] = r.standard_normal((touched.size, N // rows)) * 3e-3
+    return g.ravel()
+
+
+def grad_adversarial():
+    """Worst case for the chunk coder: dense iid values, every bin live,
+    no structure — the lossless stage must cost ~nothing here."""
+    r = _rng("gradadv")
+    return (r.standard_normal(N) * 3e-3).astype(np.float32)
+
+
+GRAD_SUITES = {
+    "gradsmooth": grad_smooth, "gradsparse": grad_sparse,
+    "gradadv": grad_adversarial,
+}
+
+
 def special_values(n=1 << 16):
     """The paper's generated special-value inputs: INF/NaN/denormal mix."""
     r = _rng("specials")

@@ -12,6 +12,8 @@ beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
   kv       KV-cache compression footprint + error (beyond paper)
   gradwire cross-pod gradient wire bytes (beyond paper)
   packedwire packed vs unpacked wire + codec throughput (beyond paper)
+  lossless device-side lossless stage: end-to-end ratio vs packed/f32 on
+           gradient-shaped + scientific data, KV pages, Pallas parity
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...]
 """
@@ -313,10 +315,90 @@ def packedwire():
           f"enc={x.size * 4 / t_pk / 1e9:.2f}GB/s")
 
 
+def lossless():
+    """Device-side lossless stage (DESIGN.md §6): end-to-end wire ratio of
+    EncodedLC / CompressedShardLC vs the packed-only wire and vs f32.
+
+    Rows:
+      * gradient wire (bin_bits=16, eb = 2^-8 * rms): the realistic
+        smooth/sparse gradients must beat the packed wire (zero chunks
+        dominate dead rows); the adversarial dense gradient shows the ~1x
+        floor — the stage never costs more than the small header plane.
+      * scientific suites via encode_packed_lc: NYX (non-negative, wide
+        range) is where width-narrowing pays beyond zero suppression;
+        CESM (dense smooth field) sits at the ~1x floor.
+      * KV pages: a cache whose tail pages are unwritten (zeros).
+      * Pallas parity: the fused kernel path must be bit-identical to the
+        jit reference in interpret mode.
+    """
+    from repro.compression.grads import (GradCompressionConfig,
+                                         compress_shard_lc, lc_wire_bytes,
+                                         wire_bytes)
+    from repro.compression.kv import (kv_quantizer_config, pack_kv,
+                                      pack_kv_lc, quantize_kv)
+    from repro.core import encode_lossless, encode_packed
+    from repro.kernels import lossless as klc
+
+    for name, gen in datasets.GRAD_SUITES.items():
+        g = jnp.asarray(gen())
+        n = g.size
+        for stage in ("zero", "narrow"):
+            cfg = GradCompressionConfig(bin_bits=16, lossless_stage=stage)
+            f = jax.jit(lambda v, c=cfg: compress_shard_lc(v, c)[0])
+            shard = f(g)
+            t = _time(f, g)
+            lc_b = float(lc_wire_bytes(shard))
+            pk_b = wire_bytes(n, cfg)
+            _emit(f"lossless.{name}.{stage}", t * 1e6,
+                  f"vs_packed={pk_b / lc_b:.2f}x vs_f32={n * 4 / lc_b:.2f}x "
+                  f"(packed_only {n * 4 / pk_b:.2f}x) "
+                  f"enc={n * 4 / t / 1e9:.2f}GB/s")
+
+    for name, eb, bb in (("NYX", 64.0, 32), ("CESM", 1e-3, 32)):
+        x = jnp.asarray(datasets.SUITES[name]())
+        cfg = QuantizerConfig(mode="abs", error_bound=eb, bin_bits=bb,
+                              outlier_cap_frac=1 / 64)
+        f = jax.jit(lambda v, c=cfg: encode_lossless(encode_packed(v, c),
+                                                     "narrow"))
+        lc = f(x)
+        t = _time(f, x)
+        pk_bits = encode_packed(x, cfg).wire_bits()
+        lc_bits = float(lc.wire_bits())
+        _emit(f"lossless.{name}.narrow", t * 1e6,
+              f"vs_packed={pk_bits / lc_bits:.2f}x "
+              f"vs_f32={x.size * 32 / lc_bits:.2f}x "
+              f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
+
+    # KV: tail pages unwritten (zeros) — the migration wire drops them
+    r = np.random.default_rng(7)
+    cache = r.standard_normal((2, 4, 1024, 64)).astype(np.float32)
+    cache[:, :, 600:, :] = 0.0
+    q = quantize_kv(jnp.asarray(cache), kv_quantizer_config())
+    pk = pack_kv(q)
+    lc = pack_kv_lc(q, stage="zero")
+    _emit("lossless.kv.zero", 0.0,
+          f"vs_packed={pk.nbytes() / float(lc.wire_nbytes()):.2f}x "
+          f"vs_f32={cache.nbytes / float(lc.wire_nbytes()):.2f}x")
+
+    # Pallas fused path vs jit reference: bit-identical in interpret mode
+    x = jnp.asarray(datasets.GRAD_SUITES["gradsmooth"]()[:1 << 19])
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-5, bin_bits=16,
+                          outlier_cap_frac=1 / 64)
+    ref = encode_lossless(encode_packed(x, cfg), "narrow")
+    ker = klc.encode_packed_lc(x, cfg, stage="narrow", interpret=True)
+    same = all(
+        (a is None and b is None) or np.array_equal(np.asarray(a),
+                                                    np.asarray(b))
+        for a, b in zip(ref, ker))
+    _emit("lossless.pallas_parity", 0.0,
+          "bit-identical" if same else "MISMATCH")
+
+
 TABLES = {
     "table3": table3, "table4": table4, "table56": table56,
     "table7": table7, "table8": table8, "table9": table9,
     "ckpt": ckpt, "kv": kv, "gradwire": gradwire, "packedwire": packedwire,
+    "lossless": lossless,
 }
 
 

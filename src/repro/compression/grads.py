@@ -13,6 +13,15 @@ Design (DESIGN.md §2/§4/§5):
     packed words crosses the collective — `wire_bytes` below is the real
     measured footprint, ~3.6x less traffic than an f32 psum at bin_bits=8
     with the 1/64 outlier cap (benchmarks/run.py gradwire).
+  * LOSSLESS STAGE (DESIGN.md §6): with `lossless_stage` set to 'zero' or
+    'narrow', the packed words are further coded by the chunked lossless
+    scheme before the gather — all-zero chunks (the common case for
+    gradients whose values sit inside the zero bin) are dropped and the
+    rest stored at the minimal word width, exactly reversible, so the
+    bound is untouched.  XLA's static shapes force the gathered payload
+    to be padded to capacity; the honest footprint is the transmitted
+    prefix (`payload_len`), which is what `lc_wire_bytes` measures and
+    what a real transport (or a size-psum'd ragged gather) would move.
   * ERROR FEEDBACK: the residual g - shipped is carried to the next step,
     so the long-run update is unbiased.  The paper's guarantee bounds the
     per-step residual ELEMENTWISE: |e_i| <= eb (outliers ship exactly, so
@@ -44,6 +53,7 @@ class GradCompressionConfig(NamedTuple):
     bin_bits: int = 8
     outlier_cap_frac: float = 1 / 64
     enabled: bool = True
+    lossless_stage: str = "none"    # 'none' | 'zero' | 'narrow' (§6)
 
     def qcfg(self) -> QuantizerConfig:
         return QuantizerConfig(mode="abs", error_bound=1.0,  # eb is traced
@@ -63,6 +73,33 @@ class CompressedShard(NamedTuple):
         """Measured per-pod wire footprint of one all-gather."""
         return (self.words.size * 4 + self.out_idx.size * 4
                 + self.out_payload.size * 4 + 4 + 4)
+
+
+class CompressedShardLC(NamedTuple):
+    """CompressedShard after the device-side lossless stage (DESIGN.md §6).
+    `payload` is padded to static capacity; the transmitted prefix is
+    `payload_len` words and `nbytes()` counts exactly that."""
+    header_words: jnp.ndarray  # uint32 — 2-bit per-chunk width codes
+    payload: jnp.ndarray       # uint32[capacity], tail zero
+    payload_len: jnp.ndarray   # int32 scalar — words actually used
+    out_idx: jnp.ndarray       # int32[K], n = empty
+    out_payload: jnp.ndarray   # uint32[K] exact IEEE bits
+    eb: jnp.ndarray            # f32 scalar per-tensor bound
+    n_outliers: jnp.ndarray    # int32 scalar (header; not gathered)
+
+    def nbytes(self):
+        """Measured per-pod transmitted footprint (traced: the payload is
+        variable-length; +4 for the transmitted length itself).  Header
+        content words only, f32 accumulation — see EncodedLC.wire_bits."""
+        n_chunks = self.payload.size // codec.LC_CHUNK
+        return (4.0 * self.payload_len.astype(jnp.float32)
+                + codec.lc_header_content_words(n_chunks) * 4 + 4
+                + self.out_idx.size * 4 + self.out_payload.size * 4 + 4 + 4)
+
+    def capacity_nbytes(self) -> int:
+        """Static upper bound — what the padded all-gather buffer holds."""
+        return (self.header_words.size * 4 + self.payload.size * 4 + 4
+                + self.out_idx.size * 4 + self.out_payload.size * 4 + 4 + 4)
 
 
 def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig):
@@ -87,6 +124,22 @@ def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig):
     return shard, q
 
 
+def compress_shard_lc(g: jnp.ndarray, cfg: GradCompressionConfig):
+    """compress_shard + the device-side lossless stage over the packed
+    words.  Returns (CompressedShardLC, Quantized); decoding the shard's
+    arrays reproduces the packed words bit-for-bit, so every guarantee of
+    compress_shard carries over."""
+    if cfg.lossless_stage not in codec.LC_STAGES:
+        raise ValueError(
+            f"compress_shard_lc needs lossless_stage in {codec.LC_STAGES}, "
+            f"got {cfg.lossless_stage!r} (use compress_shard for 'none')")
+    shard, q = compress_shard(g, cfg)
+    hw, payload, plen = codec.encode_words_lc(shard.words, cfg.lossless_stage)
+    return CompressedShardLC(hw, payload, plen, shard.out_idx,
+                             shard.out_payload, shard.eb,
+                             shard.n_outliers), q
+
+
 def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
     """Compressed mean of g over the `axis` collective (call inside
     shard_map).  Returns (mean, residual) — residual is THIS shard's
@@ -95,28 +148,42 @@ def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
     flat = g.reshape(-1).astype(jnp.float32)
     n = flat.size
     k = max(1, int(n * cfg.outlier_cap_frac))
-    shard, q = compress_shard(g, cfg)
+    n_words = codec.packed_word_count(n, cfg.bin_bits)
+    lossless = cfg.lossless_stage != "none"      # static (python) branch
+    if lossless:
+        shard, q = compress_shard_lc(g, cfg)
+    else:
+        shard, q = compress_shard(g, cfg)
     # all pods must take the same branch: agree by pmax
     any_overflow = jax.lax.pmax((shard.n_outliers > k).astype(jnp.int32),
                                 axis) > 0
     p = jax.lax.psum(1, axis)        # axis size (jax.lax.axis_size compat)
 
+    def dequant_one(w, e, ii, pp):
+        bins = codec.unpack_words(w, n, cfg.bin_bits)
+        vals = dequantize_abs(bins, qc, eb=e, dtype=jnp.float32)
+        exact = bits_to_float(pp.astype(jnp.int32), jnp.float32)
+        # mode='drop' discards empty slots (ii == n).  NEVER clamp them
+        # to n-1: an outlier at the last index would be clobbered by
+        # the empties' duplicate writes and decode as 0 — a silent
+        # guarantee violation (the residual for outliers is 0, so
+        # error feedback would not recover it either).
+        return vals.at[ii].set(exact, mode="drop")
+
     def compressed_path(_):
-        words_all = jax.lax.all_gather(shard.words, axis)    # uint32 wire
         eb_all = jax.lax.all_gather(shard.eb, axis)
         idx_all = jax.lax.all_gather(shard.out_idx, axis)
         pay_all = jax.lax.all_gather(shard.out_payload, axis)
-
-        def dequant_one(w, e, ii, pp):
-            bins = codec.unpack_words(w, n, cfg.bin_bits)
-            vals = dequantize_abs(bins, qc, eb=e, dtype=jnp.float32)
-            exact = bits_to_float(pp.astype(jnp.int32), jnp.float32)
-            # mode='drop' discards empty slots (ii == n).  NEVER clamp them
-            # to n-1: an outlier at the last index would be clobbered by
-            # the empties' duplicate writes and decode as 0 — a silent
-            # guarantee violation (the residual for outliers is 0, so
-            # error feedback would not recover it either).
-            return vals.at[ii].set(exact, mode="drop")
+        if lossless:
+            # the padded payload is gathered for shape-static XLA; the
+            # transmitted size is shard.nbytes() (payload_len words)
+            hw_all = jax.lax.all_gather(shard.header_words, axis)
+            lcp_all = jax.lax.all_gather(shard.payload, axis)
+            words_all = jax.vmap(
+                lambda hw, pw: codec.decode_words_lc(hw, pw, n_words))(
+                    hw_all, lcp_all)
+        else:
+            words_all = jax.lax.all_gather(shard.words, axis)  # uint32 wire
 
         return jnp.sum(jax.vmap(dequant_one)(words_all, eb_all, idx_all,
                                              pay_all), axis=0)
@@ -147,8 +214,18 @@ def compressed_mean_tree(grads, residuals, cfg: GradCompressionConfig,
 
 
 def wire_bytes(n_elems: int, cfg: GradCompressionConfig) -> int:
-    """Wire footprint per pod per tensor — matches CompressedShard.nbytes()
-    exactly (packed uint32 words + capped (idx, payload) table + header)."""
+    """PACKED wire footprint per pod per tensor — matches
+    CompressedShard.nbytes() exactly (packed uint32 words + capped
+    (idx, payload) table + header).  With a lossless stage the footprint
+    becomes data-dependent and this is its upper bound (modulo the small
+    header plane); use lc_wire_bytes for the measured size."""
     n_words = codec.packed_word_count(n_elems, cfg.bin_bits)
     k = max(1, int(n_elems * cfg.outlier_cap_frac))
     return n_words * 4 + k * 8 + 8
+
+
+def lc_wire_bytes(shard: CompressedShardLC):
+    """Measured transmitted footprint of one lossless-coded shard (traced
+    scalar — the payload length is data-dependent).  The gathered buffer
+    is padded to shard.capacity_nbytes(); a real transport moves this."""
+    return shard.nbytes()

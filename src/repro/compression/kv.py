@@ -33,6 +33,12 @@ Two representations:
     migration / prefill->decode disaggregation ships between hosts;
     pack_kv/unpack_kv round-trip bit-exactly, and `kv_wire_bytes` is the
     measured footprint of exactly those arrays.
+  * PackedKVLC — PackedKV after the device-side lossless stage
+    (DESIGN.md §6), coded per page so pages stay independently
+    migratable.  Zero chunks dominate padded / unwritten cache regions
+    and narrow chunks cut attention-sink-free pages; pack_kv_lc /
+    unpack_kv_lc round-trip bit-exactly and `PackedKVLC.wire_nbytes()`
+    is the measured (data-dependent) transmitted footprint.
 """
 from __future__ import annotations
 
@@ -158,6 +164,63 @@ def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
     return QuantizedKV(bins, p.eb2, p.out_idx, p.out_val, p.overflow)
 
 
+class PackedKVLC(NamedTuple):
+    """Wire form of PackedKV after the lossless stage, coded PER PAGE so
+    any subset of pages can be shipped independently.  `payload` is padded
+    to page capacity for XLA; the transmitted prefix per page is
+    `payload_len` words and wire_nbytes() counts exactly those."""
+    header_words: jnp.ndarray  # uint32 [..., n_pages, hw_per_page]
+    payload: jnp.ndarray       # uint32 [..., n_pages, page*D // 4]
+    payload_len: jnp.ndarray   # int32  [..., n_pages]
+    eb2: jnp.ndarray           # f32   [..., n_pages]
+    out_idx: jnp.ndarray       # int32 [..., n_pages, cap]
+    out_val: jnp.ndarray       # f32   [..., n_pages, cap]
+    overflow: jnp.ndarray      # bool  [..., n_pages]
+
+    def wire_nbytes(self):
+        """Measured transmitted footprint (traced: payload is variable-
+        length; +4/page for the transmitted length itself).  Per page the
+        header costs its content words only — ceil(n_chunks/16) uint32,
+        4 B at page=128/D=64 — not the tile-padded stored plane (zeros the
+        receiver re-pads); f32 accumulation, see EncodedLC.wire_bits."""
+        n_chunks = self.payload.shape[-1] // codec.LC_CHUNK
+        n_pages = self.payload_len.size
+        return (n_pages * (codec.lc_header_content_words(n_chunks) * 4 + 4)
+                + 4.0 * jnp.sum(self.payload_len.astype(jnp.float32))
+                + self.eb2.size * 4 + self.out_idx.size * 4
+                + self.out_val.size * 4 + self.overflow.size)
+
+
+def pack_kv_lc(q: QuantizedKV, *, page: int = 128,
+               stage: str = "narrow") -> PackedKVLC:
+    """pack_kv + the device-side lossless stage over each page's words.
+    Requires whole LC chunks per page — page*D % (4*LC_CHUNK) == 0, i.e.
+    D % 16 == 0 at page=128 — so the per-page payload capacity equals the
+    page's word count and pages stay self-describing."""
+    p = pack_kv(q, page=page)
+    *lead, n_pages, wpp = p.words.shape
+    assert wpp % codec.LC_CHUNK == 0, (page, wpp)
+    flat = p.words.reshape(-1, wpp)
+    hw, payload, plen = jax.vmap(
+        lambda w: codec.encode_words_lc(w, stage))(flat)
+    return PackedKVLC(hw.reshape(*lead, n_pages, -1),
+                      payload.reshape(*lead, n_pages, -1),
+                      plen.reshape(*lead, n_pages), p.eb2, p.out_idx,
+                      p.out_val, p.overflow)
+
+
+def unpack_kv_lc(p: PackedKVLC, *, page: int = 128) -> QuantizedKV:
+    """Inverse of pack_kv_lc (bit-exact)."""
+    *lead, n_pages, cap_words = p.payload.shape
+    hw = p.header_words.reshape(-1, p.header_words.shape[-1])
+    pay = p.payload.reshape(-1, cap_words)
+    words = jax.vmap(
+        lambda h, w: codec.decode_words_lc(h, w, cap_words))(hw, pay)
+    packed = PackedKV(words.reshape(*lead, n_pages, cap_words), p.eb2,
+                      p.out_idx, p.out_val, p.overflow)
+    return unpack_kv(packed, page=page)
+
+
 def gather_kv_packed(p: PackedKV, axis: str) -> PackedKV:
     """All-gather a packed cache over a mesh axis (prefill->decode
     disaggregation: every decode host receives every prefill shard's pages
@@ -166,6 +229,15 @@ def gather_kv_packed(p: PackedKV, axis: str) -> PackedKV:
     g = lambda a: jax.lax.all_gather(a, axis)
     return PackedKV(g(p.words), g(p.eb2), g(p.out_idx), g(p.out_val),
                     g(p.overflow))
+
+
+def gather_kv_packed_lc(p: PackedKVLC, axis: str) -> PackedKVLC:
+    """gather_kv_packed for the lossless-coded wire form.  The padded
+    payload plane is gathered for shape-static XLA; the honest transfer
+    size is wire_nbytes() (see the grads.py note on length transmission)."""
+    g = lambda a: jax.lax.all_gather(a, axis)
+    return PackedKVLC(g(p.header_words), g(p.payload), g(p.payload_len),
+                      g(p.eb2), g(p.out_idx), g(p.out_val), g(p.overflow))
 
 
 def kv_wire_bytes(shape, *, page: int = 128, cap: int = 8) -> int:

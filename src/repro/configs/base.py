@@ -3,7 +3,7 @@
 One ArchConfig per assigned architecture (exact public numbers, see the
 per-arch files) plus `reduced()` for CPU smoke tests.  ShapeConfig carries
 the four assigned input shapes; `runnable()` encodes the skip rules
-(long_500k only for sub-quadratic families — DESIGN.md §6).
+(long_500k only for sub-quadratic families — see ShapeConfig.runnable).
 """
 from __future__ import annotations
 

@@ -6,15 +6,20 @@ Public API:
     quantize / Quantized        — bins + outlier flags + recon (jit-safe)
     encode_dense/decode_dense   — fixed-shape codec, outliers stored densely
     encode_compact/decode_compact — capped compact outliers (wire format)
+    encode_packed/decode_packed — bins bit-packed into uint32 lanes (§4)
+    encode_lossless/decode_lossless — device-side lossless stage (§6)
     serialize/deserialize       — host byte stream (LC-style inline outliers)
     log2approx/pow2approx       — parity-safe transcendental replacements
 """
 from .bitops import bits_to_float, float_to_bits, log2approx, pow2approx
-from .codec import (EncodedCompact, EncodedDense, EncodedPacked,
-                    decode_compact, decode_dense, decode_packed,
-                    encode_compact, encode_dense, encode_packed, pack_flags,
-                    pack_words, packed_word_count, roundtrip_dense,
-                    unpack_flags, unpack_words)
+from .codec import (LC_CHUNK, LC_STAGES, EncodedCompact, EncodedDense,
+                    EncodedLC, EncodedPacked, decode_compact, decode_dense,
+                    decode_lossless, decode_packed, decode_words_lc,
+                    encode_compact, encode_dense, encode_lossless,
+                    encode_packed, encode_words_lc, lc_chunk_count,
+                    lc_header_words, pack_flags, pack_words,
+                    packed_word_count, roundtrip_dense, unpack_flags,
+                    unpack_words)
 from .config import QuantizerConfig
 from .quantizer import (Quantized, dequantize_abs, dequantize_rel, quantize,
                         quantize_abs, quantize_abs_unprotected, quantize_noa,
@@ -28,7 +33,9 @@ __all__ = [
     "encode_compact", "decode_compact", "encode_packed", "decode_packed",
     "pack_words", "unpack_words", "pack_flags", "unpack_flags",
     "packed_word_count", "roundtrip_dense", "EncodedDense",
-    "EncodedCompact", "EncodedPacked", "serialize", "deserialize",
-    "compression_ratio",
+    "EncodedCompact", "EncodedPacked", "EncodedLC", "encode_lossless",
+    "decode_lossless", "encode_words_lc", "decode_words_lc",
+    "lc_chunk_count", "lc_header_words", "LC_CHUNK", "LC_STAGES",
+    "serialize", "deserialize", "compression_ratio",
     "log2approx", "pow2approx", "float_to_bits", "bits_to_float",
 ]

@@ -21,6 +21,12 @@ Three layouts:
     the jit-safe lax shift/or reference paths, bit-exact oracles for the
     fused Pallas kernels in kernels/pack.py.  Layout documented in
     DESIGN.md §4 and under pack_words below.
+  * LC — PACKED followed by the device-side lossless coding stage
+    (DESIGN.md §6): the uint32 word stream is chunked, all-zero chunks are
+    dropped, and the remaining chunks are stored at the minimal word width
+    they need.  encode_lossless/decode_lossless are exact inverses, so the
+    end-to-end bound guarantee is untouched; the Pallas twin lives in
+    kernels/lossless.py.
 
 Bin storage width is cfg.bin_bits; bins are produced as int32 and narrowed
 here (safe: the quantizer's range check already confined them to
@@ -151,7 +157,7 @@ def roundtrip_dense(x: jnp.ndarray, cfg: QuantizerConfig):
 # Pallas kernels and this reference produce bit-identical words.
 
 PACK_LANES = 128          # lane width of the packed tile (VPU native)
-_PACK_WIDTHS = (1, 8, 16, 32)
+_PACK_WIDTHS = (1, 2, 4, 8, 16, 32)
 
 
 def packed_word_count(n: int, bin_bits: int) -> int:
@@ -282,3 +288,214 @@ def decode_packed(enc: EncodedPacked, cfg: QuantizerConfig, n: int | None = None
     vals = bits_to_float(enc.out_payload.astype(jnp.int32), dt)
     recon = recon.at[enc.out_idx].set(vals, mode="drop")
     return recon.reshape(shape) if shape is not None else recon
+
+
+# ---------------------------------------------------------------------------
+# LC layout — device-side lossless stage over the packed word stream
+# ---------------------------------------------------------------------------
+#
+# The paper's LC pipeline follows quantize+pack with a lossless coder — the
+# stage GPU compressors win their ratio in (cuSZ's Huffman over quantization
+# codes, FZ-GPU's bitshuffle + zero-suppression).  This is the TPU-shaped
+# equivalent (DESIGN.md §6): the packed uint32 word stream is split into
+# chunks of LC_CHUNK = 512 words (4 sublane rows x 128 lanes), and each
+# chunk is stored at the minimal word width it needs:
+#
+#   code 0 — all words zero: the chunk is dropped entirely (dominant for
+#            smooth/sparse gradients where most bins hit the zero bin);
+#   code 1 — every word < 2^8:  stored at  8 bits/word (4 words/uint32);
+#   code 2 — every word < 2^16: stored at 16 bits/word (2 words/uint32);
+#   code 3 — verbatim uint32 words.
+#
+# A chunk's narrowed image IS pack_words(chunk_words, width): LC_CHUNK was
+# chosen so one chunk is a whole pack tile at width 8 (vpw 4 * 128 lanes)
+# and two tiles at width 16 — the narrowing reuses the sublane shift/or
+# machinery and therefore fuses into the same kernels (kernels/lossless.py).
+# The 2-bit codes pack into a header plane via pack_words(codes, 2).
+#
+# XLA needs static shapes, so the variable-length payload is carried
+# padded-to-capacity (n_chunks * LC_CHUNK words) with the used word count
+# transmitted in `payload_len` — a real transport moves only payload_len
+# words plus the header plane; wire_bits() accounts exactly that.
+# encode 'stage' selects the mode: 'zero' restricts codes to {0, 3} (zero
+# suppression only), 'narrow' uses the full set.
+
+LC_CHUNK = 512                 # words per chunk (4 x PACK_LANES)
+LC_STAGES = ("zero", "narrow")
+_LC_WIDTHS = (0, 8, 16, 32)    # stored word width per header code
+_LC_LENS = tuple(LC_CHUNK * w // 32 for w in _LC_WIDTHS)   # payload words
+
+
+def lc_chunk_count(n_words: int) -> int:
+    return -(-n_words // LC_CHUNK)
+
+
+def lc_header_words(n_words: int) -> int:
+    """uint32 words in the STORED 2-bit header plane for an n_words stream
+    (tile-padded per the §4 layout, pad words zero)."""
+    return packed_word_count(lc_chunk_count(n_words), 2)
+
+
+def lc_header_content_words(n_chunks: int) -> int:
+    """uint32 words of real header content — 16 two-bit codes per word.
+    This is what a transport moves; the stored plane is tile-padded to
+    lc_header_words(...) with zeros the receiver re-pads, exactly like the
+    payload's capacity padding."""
+    return -(-n_chunks // 16)
+
+
+def lc_chunk_codes(chunks: jnp.ndarray, stage: str) -> jnp.ndarray:
+    """Per-chunk width code.  chunks: uint32[n_chunks, LC_CHUNK]."""
+    if stage not in LC_STAGES:
+        raise ValueError(f"lossless stage must be one of {LC_STAGES}")
+    mx = jnp.max(chunks, axis=1)
+    zero = mx == 0
+    if stage == "zero":
+        return jnp.where(zero, 0, 3).astype(jnp.int32)
+    return jnp.where(zero, 0,
+                     jnp.where(mx < (1 << 8), 1,
+                               jnp.where(mx < (1 << 16), 2, 3))
+                     ).astype(jnp.int32)
+
+
+def lc_chunk_lens(codes: jnp.ndarray) -> jnp.ndarray:
+    """Payload words each chunk occupies, from its header code."""
+    return jnp.take(jnp.asarray(_LC_LENS, jnp.int32), codes)
+
+
+def lc_narrow_chunks(chunks: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Narrow each chunk to its code's width, left-aligned and zero-padded
+    to LC_CHUNK (the compaction scatter strips the padding)."""
+    n_chunks = chunks.shape[0]
+    flat = chunks.reshape(-1)
+    # full-stream pack groups whole chunks (LC_CHUNK is a tile multiple for
+    # both widths), so this equals a per-chunk pack_words — and equals the
+    # kernels' sublane _pack_block on the same rows.
+    cand1 = pack_words(flat, 8).reshape(n_chunks, LC_CHUNK // 4)
+    cand2 = pack_words(flat, 16).reshape(n_chunks, LC_CHUNK // 2)
+    pad1 = jnp.pad(cand1, ((0, 0), (0, LC_CHUNK - LC_CHUNK // 4)))
+    pad2 = jnp.pad(cand2, ((0, 0), (0, LC_CHUNK - LC_CHUNK // 2)))
+    c = codes[:, None]
+    return jnp.where(c == 1, pad1,
+                     jnp.where(c == 2, pad2,
+                               jnp.where(c == 3, chunks, jnp.uint32(0))))
+
+
+def lc_compact_payload(sel: jnp.ndarray, codes: jnp.ndarray):
+    """Concatenate the narrowed chunks at their true lengths.  Returns
+    (payload uint32[n_chunks * LC_CHUNK] with the tail zero, payload_len
+    int32 scalar — the words a real transport moves)."""
+    n_chunks = sel.shape[0]
+    cap = n_chunks * LC_CHUNK
+    lens = lc_chunk_lens(codes)
+    ends = jnp.cumsum(lens)
+    offs = ends - lens
+    slot = jnp.arange(LC_CHUNK, dtype=jnp.int32)[None, :]
+    dest = jnp.where(slot < lens[:, None], offs[:, None] + slot, cap)
+    payload = jnp.zeros((cap,), jnp.uint32).at[dest.reshape(-1)].set(
+        sel.reshape(-1), mode="drop")
+    return payload, ends[-1].astype(jnp.int32)
+
+
+def lc_gather_chunks(payload: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of lc_compact_payload: re-pad each chunk's narrowed words to
+    LC_CHUNK slots.  Returns uint32[n_chunks, LC_CHUNK]."""
+    lens = lc_chunk_lens(codes)
+    ends = jnp.cumsum(lens)
+    offs = ends - lens
+    slot = jnp.arange(LC_CHUNK, dtype=jnp.int32)[None, :]
+    valid = slot < lens[:, None]
+    src = jnp.where(valid, offs[:, None] + slot, 0)
+    return jnp.where(valid, payload[src], jnp.uint32(0))
+
+
+def lc_expand_chunks(padded: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Widen narrowed chunks back to uint32 words (exact inverse of
+    lc_narrow_chunks for the valid prefix)."""
+    n_chunks = padded.shape[0]
+    flat_n = n_chunks * LC_CHUNK
+    exp1 = unpack_words(padded[:, :LC_CHUNK // 4].reshape(-1), flat_n, 8,
+                        signed=False).reshape(n_chunks, LC_CHUNK)
+    exp2 = unpack_words(padded[:, :LC_CHUNK // 2].reshape(-1), flat_n, 16,
+                        signed=False).reshape(n_chunks, LC_CHUNK)
+    c = codes[:, None]
+    return jnp.where(c == 1, exp1,
+                     jnp.where(c == 2, exp2,
+                               jnp.where(c == 3, padded, jnp.uint32(0))))
+
+
+def encode_words_lc(words: jnp.ndarray, stage: str = "narrow"):
+    """Lossless-code a packed uint32 word stream (layout in the module
+    note).  Returns (header_words, payload, payload_len); jit-safe, exact.
+    Reusable on any word plane (gradient shards, KV pages, sign planes)."""
+    n_words = words.shape[0]
+    n_chunks = lc_chunk_count(n_words)
+    wpad = jnp.pad(words, (0, n_chunks * LC_CHUNK - n_words))
+    chunks = wpad.reshape(n_chunks, LC_CHUNK)
+    codes = lc_chunk_codes(chunks, stage)
+    sel = lc_narrow_chunks(chunks, codes)
+    payload, plen = lc_compact_payload(sel, codes)
+    return pack_words(codes, 2), payload, plen
+
+
+def decode_words_lc(header_words: jnp.ndarray, payload: jnp.ndarray,
+                    n_words: int) -> jnp.ndarray:
+    """Exact inverse of encode_words_lc.  n_words is the pre-coding word
+    count (packed_word_count of the element count)."""
+    n_chunks = lc_chunk_count(n_words)
+    codes = unpack_words(header_words, n_chunks, 2,
+                         signed=False).astype(jnp.int32)
+    padded = lc_gather_chunks(payload, codes)
+    return lc_expand_chunks(padded, codes).reshape(-1)[:n_words]
+
+
+class EncodedLC(NamedTuple):
+    """PACKED after the device-side lossless stage — the compressed wire.
+
+    `payload` is padded to static capacity for XLA; only `payload_len`
+    words of it (plus the header plane and the outlier table) are
+    meaningful, and wire_bits() counts exactly those.  decode_lossless
+    reproduces the EncodedPacked bit-for-bit, so every guarantee statement
+    about PACKED carries over verbatim.  Layout: DESIGN.md §6.
+    """
+    header_words: jnp.ndarray   # uint32 — 2-bit per-chunk width codes
+    payload: jnp.ndarray        # uint32[capacity] — compacted chunk data
+    payload_len: jnp.ndarray    # int32 scalar — words actually used
+    out_idx: jnp.ndarray        # int32[K], n = "empty slot"
+    out_payload: jnp.ndarray    # uint32[K] — original IEEE bits
+    n_outliers: jnp.ndarray     # int32 scalar
+    overflow: jnp.ndarray       # bool scalar (bound NOT met when True)
+    sign_words: jnp.ndarray | None  # uint32 (REL only, not lossless-coded)
+    eb: jnp.ndarray | None      # traced scalar bound
+
+    def wire_bits(self, cfg: QuantizerConfig | None = None):
+        """Transmitted wire size in bits.  Traced (data-dependent) because
+        the payload is variable-length; +32 for the transmitted length.
+        Counts the header plane's content words only (its tile padding is
+        zeros the receiver re-pads, like the payload's capacity padding).
+        Accumulated in f32: exact through 2^24 words and degrades to
+        rounding (never wraparound) beyond — int32 would go negative at
+        256 MiB payloads, and this JAX has no int64."""
+        n_chunks = self.payload.shape[0] // LC_CHUNK
+        bits = 32.0 * self.payload_len.astype(jnp.float32)
+        bits = bits + 32 * lc_header_content_words(n_chunks)
+        bits = bits + self.out_idx.shape[0] * (32 + 32)
+        if self.sign_words is not None:
+            bits = bits + 32 * self.sign_words.shape[0]
+        return bits + 64 + 32       # packed header + payload_len field
+
+
+def encode_lossless(enc: EncodedPacked, stage: str = "narrow") -> EncodedLC:
+    """Run the device-side lossless stage over an EncodedPacked (reference
+    path; kernels/lossless.py is its bit-exact Pallas twin)."""
+    header_words, payload, plen = encode_words_lc(enc.words, stage)
+    return EncodedLC(header_words, payload, plen, enc.out_idx,
+                     enc.out_payload, enc.n_outliers, enc.overflow,
+                     enc.sign_words, enc.eb)
+
+
+def decode_lossless(lc: EncodedLC, n_words: int) -> EncodedPacked:
+    """Exact inverse of encode_lossless; n_words as in decode_words_lc."""
+    words = decode_words_lc(lc.header_words, lc.payload, n_words)
+    return EncodedPacked(words, lc.out_idx, lc.out_payload, lc.n_outliers,
+                         lc.overflow, lc.sign_words, lc.eb)

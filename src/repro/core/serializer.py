@@ -1,4 +1,4 @@
-"""Host-side byte-stream serializer — the LC-style on-disk/wire format.
+"""Host-side byte-stream serializer — the LC-style on-disk/archival format.
 
 Unlike the jit codec (static shapes), this is true variable-length
 encoding: outliers are stored INLINE with the bin numbers via an escape
@@ -6,6 +6,15 @@ code (+maxbin, which the quantizer's range check keeps out of the valid
 bin range), exactly the paper's §3.1 design point vs SZ3's separate
 outlier list.  A final lossless stage (zlib, standing in for LC's
 lossless components) compresses the packed stream.
+
+Two lossless coders, one pipeline (DESIGN.md §6): zlib here is the
+HOST/ARCHIVAL coder — highest ratio, byte-stream output, not jit-able —
+used for checkpoints and offline storage.  The DEVICE/WIRE coder is the
+chunked zero/narrow scheme of core.codec.encode_lossless (EncodedLC):
+weaker ratio but exact, shape-static, and fused into the quantize+pack
+kernels, so it is what collectives and cache migrations move.
+`compression_ratio` below can report either side (wire=) so benchmark
+numbers stay comparable.
 
 Layout (little-endian):
   u32 magic | u8 mode | u8 dtype | u8 bin_bits | u8 flags
@@ -126,7 +135,30 @@ def deserialize(stream: bytes) -> tuple[np.ndarray, QuantizerConfig]:
 
 
 def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
-                      stream: bytes | None = None) -> float:
-    if stream is None:
-        stream = serialize(x, cfg, level)
-    return x.nbytes / len(stream)
+                      stream: bytes | None = None, wire: str = "host"):
+    """Compression ratio of x under cfg.
+
+    wire='host'   — this module's zlib byte stream (archival coder).
+    wire='device' — the jit wire format: EncodedPacked + the chunked
+                    lossless stage (core.codec.encode_lossless), counting
+                    the transmitted bits only (DESIGN.md §6).
+    wire='both'   — (host, device) tuple, for comparable benchmark rows.
+    """
+    if wire not in ("host", "device", "both"):
+        raise ValueError(f"wire must be host|device|both, got {wire!r}")
+    host = device = None
+    if wire in ("host", "both"):
+        if stream is None:
+            stream = serialize(x, cfg, level)
+        host = x.nbytes / len(stream)
+    if wire in ("device", "both"):
+        from . import codec as _codec                # lazy: jax import
+        import jax.numpy as jnp
+        enc = _codec.encode_lossless(
+            _codec.encode_packed(jnp.asarray(x), cfg))
+        device = x.nbytes / (float(enc.wire_bits()) / 8)
+    if wire == "host":
+        return host
+    if wire == "device":
+        return device
+    return host, device

@@ -25,6 +25,11 @@ vs the seed pipeline's 9 B/element kernel output, and no recon plane or
 full-width bins are ever materialized (outliers ride the capped
 (idx, payload) table; the REL sign plane packs at 1 bit/value vs a
 byte-wide bool).
+
+The device-side lossless stage (DESIGN.md §6) rides this same HBM pass:
+kernels/lossless.py reuses _abs/_rel_quantize_block and _pack_block below
+to fuse quantize + pack + per-chunk zero-detection/width-narrowing into
+one kernel.
 """
 from __future__ import annotations
 
@@ -79,11 +84,11 @@ def _narrow_mask(bin_bits):
 
 # ---------------------------------------------------- fused quantize+pack --
 
-def _abs_pack_kernel(x_ref, eb_ref, words_ref, out_ref, *, maxbin, tighten,
-                     eb_floor, bin_bits):
-    x = x_ref[...]
+def _abs_quantize_block(x, eb_in, *, maxbin, tighten, eb_floor):
+    """In-kernel ABS quantize math (bit-exact twin of core.quantizer).
+    Returns (bins int32 with outliers zeroed, outlier bool).  Shared by the
+    pack kernels here and the fused lossless kernels (kernels/lossless.py)."""
     dt = x.dtype
-    eb_in = eb_ref[0, 0]
     degenerate = ~(eb_in >= eb_floor)            # FTZ guard (see core.config)
     eb = jnp.maximum(eb_in, eb_floor)
     mant_mask = (1 << 23) - 1 if dt == jnp.float32 else (1 << 52) - 1
@@ -104,18 +109,12 @@ def _abs_pack_kernel(x_ref, eb_ref, words_ref, out_ref, *, maxbin, tighten,
     fails = ~(jnp.abs(x - recon) <= eb * jnp.asarray(tighten, dt))
     fails |= ~jnp.isfinite(recon)    # recon-overflow guard (see quantizer.py)
     outlier = (~finite) | range_bad | range_bad_i | fails | degenerate
-
-    bins = jnp.where(outlier, 0, bin_i)
-    words_ref[...] = _pack_block(
-        bins.astype(jnp.uint32) & _narrow_mask(bin_bits),
-        32 // bin_bits, bin_bits)
-    out_ref[...] = outlier
+    return jnp.where(outlier, 0, bin_i), outlier
 
 
-def _rel_pack_kernel(x_ref, words_ref, out_ref, sign_words_ref, *, maxbin,
-                     tighten, eb, log_step, inv_log_step, screen, tiny, mb,
-                     emask, bias, bin_bits):
-    x = x_ref[...]
+def _rel_quantize_block(x, *, maxbin, tighten, eb, log_step, inv_log_step,
+                        screen, tiny, mb, emask, bias):
+    """In-kernel REL quantize math.  Returns (bins, outlier, neg)."""
     dt = x.dtype
     int_t = jnp.int32 if dt == jnp.float32 else jnp.int64
 
@@ -136,8 +135,27 @@ def _rel_pack_kernel(x_ref, words_ref, out_ref, sign_words_ref, *, maxbin,
     ok = (jnp.abs(x - recon) <= ebT * ax) & jnp.isfinite(recon)
     ok &= mag >= jnp.asarray(tiny, dt)
     outlier = (~finite) | too_small | range_bad | range_bad_i | ~ok
+    return jnp.where(outlier, 0, bin_i), outlier, neg
 
-    bins = jnp.where(outlier, 0, bin_i)
+
+def _abs_pack_kernel(x_ref, eb_ref, words_ref, out_ref, *, maxbin, tighten,
+                     eb_floor, bin_bits):
+    bins, outlier = _abs_quantize_block(x_ref[...], eb_ref[0, 0],
+                                        maxbin=maxbin, tighten=tighten,
+                                        eb_floor=eb_floor)
+    words_ref[...] = _pack_block(
+        bins.astype(jnp.uint32) & _narrow_mask(bin_bits),
+        32 // bin_bits, bin_bits)
+    out_ref[...] = outlier
+
+
+def _rel_pack_kernel(x_ref, words_ref, out_ref, sign_words_ref, *, maxbin,
+                     tighten, eb, log_step, inv_log_step, screen, tiny, mb,
+                     emask, bias, bin_bits):
+    bins, outlier, neg = _rel_quantize_block(
+        x_ref[...], maxbin=maxbin, tighten=tighten, eb=eb, log_step=log_step,
+        inv_log_step=inv_log_step, screen=screen, tiny=tiny, mb=mb,
+        emask=emask, bias=bias)
     words_ref[...] = _pack_block(
         bins.astype(jnp.uint32) & _narrow_mask(bin_bits),
         32 // bin_bits, bin_bits)

@@ -4,7 +4,7 @@ Mesh axes:
   single-pod  (16, 16)      ("data", "model")            = 256 chips
   multi-pod   (2, 16, 16)   ("pod", "data", "model")     = 512 chips
 
-Parallelism mapping (DESIGN.md §5):
+Parallelism mapping (DESIGN.md §2):
   * 'data'  — FSDP/ZeRO-3: weights + optimizer state sharded on their
     'embed' dimension; per-layer all-gather under the scan.
   * 'model' — tensor parallel (attention heads / MLP columns / vocab) and
