@@ -122,6 +122,17 @@ GRAD_SUITES = {
 }
 
 
+def rel_mixed():
+    """Mixed-sign REL bins: |x| straddles 1, so the log-domain bins carry
+    both signs and two's-complement sign extension sets the high bits of
+    every packed word — the case the shuffle stage (DESIGN.md §7) exists
+    for (narrow alone sits at its ~1x floor here)."""
+    r = _rng("relmix")
+    mag = np.exp(r.standard_normal(N) * 1.5)            # log2|x| ~ N(0, 2.2)
+    sgn = np.where(r.random(N) < 0.5, -1.0, 1.0)
+    return (mag * sgn).astype(np.float32)
+
+
 def special_values(n=1 << 16):
     """The paper's generated special-value inputs: INF/NaN/denormal mix."""
     r = _rng("specials")

@@ -13,12 +13,20 @@ beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
   gradwire cross-pod gradient wire bytes (beyond paper)
   packedwire packed vs unpacked wire + codec throughput (beyond paper)
   lossless device-side lossless stage: end-to-end ratio vs packed/f32 on
-           gradient-shaped + scientific data, KV pages, Pallas parity
+           gradient-shaped + scientific data, KV pages, Pallas parity,
+           and the shuffle stage on mixed-sign REL bins
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+           [--pipeline SPEC|PRESET] [--smoke]
+
+--pipeline benches an arbitrary pipeline chain (DESIGN.md §7 spec string
+like "rel:1e-3|pack:8|zero|narrow", or a configs.registry preset name)
+in the `lossless` table; --smoke shrinks the lossless table's
+datasets/repeats for CI.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -315,39 +323,80 @@ def packedwire():
           f"enc={x.size * 4 / t_pk / 1e9:.2f}GB/s")
 
 
-def lossless():
-    """Device-side lossless stage (DESIGN.md §6): end-to-end wire ratio of
-    EncodedLC / CompressedShardLC vs the packed-only wire and vs f32.
+def _bench_pipeline_chain(spec: str, smoke: bool):
+    """Bench one arbitrary pipeline chain (--pipeline): transmitted-wire
+    ratio vs the packed-only prefix and vs f32, on the gradient suites
+    plus the mixed-sign REL suite."""
+    from repro.core import parse_pipeline
+
+    from repro.core.pipeline import Pipeline
+
+    pipe = parse_pipeline(spec)
+    pk_pipe = Pipeline(pipe.quant, pipe.pack)      # packed-only prefix
+    cut = 1 << 18 if smoke else None
+    suites = dict(datasets.GRAD_SUITES, relmix=datasets.rel_mixed)
+    for name, gen in suites.items():
+        x = jnp.asarray(gen()[:cut])
+        f = jax.jit(lambda v: pipe.encode(v))
+        enc = f(x)
+        t = _time(f, x, repeats=1 if smoke else 5)
+        bits = float(pipe.wire_bits(enc, x.size))
+        pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x, kernels=False), x.size)
+        # honest accounting: overflow means the capped table could NOT
+        # absorb the outliers — the bound is not met and a real caller
+        # must take the lossless fallback; a ratio alone would hide that
+        _emit(f"lossless.pipeline.{name}", t * 1e6,
+              f"spec={pipe.spec()} vs_packed={pk_bits / bits:.2f}x "
+              f"vs_f32={x.size * 32 / bits:.2f}x "
+              f"overflow={bool(enc.overflow)} "
+              f"outliers={float(enc.n_outliers) / x.size:.3f}")
+
+
+def lossless(pipeline: str | None = None, smoke: bool = False):
+    """Device-side lossless stages (DESIGN.md §6/§7): end-to-end
+    transmitted-wire ratio of the pipeline's `Encoded` vs the packed-only
+    wire and vs f32.
 
     Rows:
-      * gradient wire (bin_bits=16, eb = 2^-8 * rms): the realistic
+      * gradient wire (pack:16, eb = 2^-8 * rms): the realistic
         smooth/sparse gradients must beat the packed wire (zero chunks
         dominate dead rows); the adversarial dense gradient shows the ~1x
         floor — the stage never costs more than the small header plane.
-      * scientific suites via encode_packed_lc: NYX (non-negative, wide
-        range) is where width-narrowing pays beyond zero suppression;
-        CESM (dense smooth field) sits at the ~1x floor.
+      * scientific suites: NYX (non-negative, wide range) is where
+        width-narrowing pays beyond zero suppression; CESM (dense smooth
+        field) sits at the ~1x floor.
+      * mixed-sign REL bins: narrow alone sits at its floor (sign
+        extension sets the high bits of every word); the shuffle stage's
+        zigzag fold + byte-plane shuffle is what unlocks the win.
       * KV pages: a cache whose tail pages are unwritten (zeros).
-      * Pallas parity: the fused kernel path must be bit-identical to the
-        jit reference in interpret mode.
+      * Pallas parity: the pipeline's fused-kernel dispatch must be
+        bit-identical to its jit reference in interpret mode.
+
+    --pipeline SPEC replaces the fixed rows with the given chain.
     """
     from repro.compression.grads import (GradCompressionConfig,
-                                         compress_shard_lc, lc_wire_bytes,
-                                         wire_bytes)
-    from repro.compression.kv import (kv_quantizer_config, pack_kv,
-                                      pack_kv_lc, quantize_kv)
-    from repro.core import encode_lossless, encode_packed
-    from repro.kernels import lossless as klc
+                                         compress_shard, wire_bytes)
+    from repro.compression.kv import kv_quantizer_config, pack_kv, quantize_kv
+    from repro.core import parse_pipeline
+
+    if pipeline is not None:
+        _bench_pipeline_chain(pipeline, smoke)
+        return
+
+    cut = 1 << 18 if smoke else None      # --smoke: small data, 1 repeat
+    reps = 1 if smoke else 5
 
     for name, gen in datasets.GRAD_SUITES.items():
-        g = jnp.asarray(gen())
+        g = jnp.asarray(gen()[:cut])
         n = g.size
         for stage in ("zero", "narrow"):
-            cfg = GradCompressionConfig(bin_bits=16, lossless_stage=stage)
-            f = jax.jit(lambda v, c=cfg: compress_shard_lc(v, c)[0])
+            cfg = GradCompressionConfig(
+                bin_bits=16,
+                pipeline=f"abs:1.0:cap=0.015625|pack:16|{stage}")
+            f = jax.jit(lambda v, c=cfg: compress_shard(v, c)[0])
             shard = f(g)
-            t = _time(f, g)
-            lc_b = float(lc_wire_bytes(shard))
+            t = _time(f, g, repeats=reps)
+            lc_b = float(shard.nbytes())
             pk_b = wire_bytes(n, cfg)
             _emit(f"lossless.{name}.{stage}", t * 1e6,
                   f"vs_packed={pk_b / lc_b:.2f}x vs_f32={n * 4 / lc_b:.2f}x "
@@ -355,18 +404,33 @@ def lossless():
                   f"enc={n * 4 / t / 1e9:.2f}GB/s")
 
     for name, eb, bb in (("NYX", 64.0, 32), ("CESM", 1e-3, 32)):
-        x = jnp.asarray(datasets.SUITES[name]())
-        cfg = QuantizerConfig(mode="abs", error_bound=eb, bin_bits=bb,
-                              outlier_cap_frac=1 / 64)
-        f = jax.jit(lambda v, c=cfg: encode_lossless(encode_packed(v, c),
-                                                     "narrow"))
+        x = jnp.asarray(datasets.SUITES[name]()[:cut])
+        pipe = parse_pipeline(f"abs:{eb!r}:cap=0.015625|pack:{bb}|narrow")
+        f = jax.jit(lambda v: pipe.encode(v))
         lc = f(x)
-        t = _time(f, x)
-        pk_bits = encode_packed(x, cfg).wire_bits()
-        lc_bits = float(lc.wire_bits())
+        t = _time(f, x, repeats=reps)
+        pk_pipe = parse_pipeline(f"abs:{eb!r}:cap=0.015625|pack:{bb}")
+        pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x, kernels=False), x.size)
+        lc_bits = float(pipe.wire_bits(lc, x.size))
         _emit(f"lossless.{name}.narrow", t * 1e6,
               f"vs_packed={pk_bits / lc_bits:.2f}x "
               f"vs_f32={x.size * 32 / lc_bits:.2f}x "
+              f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
+
+    # mixed-sign REL bins: the shuffle stage's reason to exist (§7)
+    x = jnp.asarray(datasets.rel_mixed()[:cut])
+    pk_pipe = parse_pipeline("rel:0.001|pack:32")
+    pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x, kernels=False), x.size)
+    for chain, label in (("narrow", "narrow"),
+                         ("shuffle|narrow", "shuffle+narrow")):
+        pipe = parse_pipeline(f"rel:0.001|pack:32|{chain}")
+        f = jax.jit(lambda v, p=pipe: p.encode(v))
+        enc = f(x)
+        t = _time(f, x, repeats=reps)
+        bits = float(pipe.wire_bits(enc, x.size))
+        _emit(f"lossless.relmix.{label}", t * 1e6,
+              f"vs_packed={pk_bits / bits:.2f}x "
+              f"vs_f32={x.size * 32 / bits:.2f}x "
               f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
 
     # KV: tail pages unwritten (zeros) — the migration wire drops them
@@ -375,20 +439,23 @@ def lossless():
     cache[:, :, 600:, :] = 0.0
     q = quantize_kv(jnp.asarray(cache), kv_quantizer_config())
     pk = pack_kv(q)
-    lc = pack_kv_lc(q, stage="zero")
+    lc = pack_kv(q, stages="zero")
     _emit("lossless.kv.zero", 0.0,
           f"vs_packed={pk.nbytes() / float(lc.wire_nbytes()):.2f}x "
           f"vs_f32={cache.nbytes / float(lc.wire_nbytes()):.2f}x")
 
-    # Pallas fused path vs jit reference: bit-identical in interpret mode
+    # Pallas fused dispatch vs jit reference: bit-identical in interpret
     x = jnp.asarray(datasets.GRAD_SUITES["gradsmooth"]()[:1 << 19])
-    cfg = QuantizerConfig(mode="abs", error_bound=1e-5, bin_bits=16,
-                          outlier_cap_frac=1 / 64)
-    ref = encode_lossless(encode_packed(x, cfg), "narrow")
-    ker = klc.encode_packed_lc(x, cfg, stage="narrow", interpret=True)
+    pipe = parse_pipeline("abs:1e-05:cap=0.015625|pack:16|narrow")
+    ref = pipe.encode(x, kernels=False)
+    ker = pipe.encode(x, kernels=True, interpret=True)
     same = all(
-        (a is None and b is None) or np.array_equal(np.asarray(a),
-                                                    np.asarray(b))
+        (a is None and b is None) or (np.array_equal(np.asarray(a),
+                                                     np.asarray(b))
+                                      if not isinstance(a, tuple) else
+                                      all(np.array_equal(np.asarray(p),
+                                                         np.asarray(q_))
+                                          for p, q_ in zip(a, b)))
         for a, b in zip(ref, ker))
     _emit("lossless.pallas_parity", 0.0,
           "bit-identical" if same else "MISMATCH")
@@ -402,11 +469,42 @@ TABLES = {
 }
 
 
-def main() -> None:
-    names = sys.argv[1:] or list(TABLES)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("names", nargs="*", default=[],
+                    help=f"tables to run (default: all of {list(TABLES)})")
+    ap.add_argument("--pipeline", default=None, metavar="SPEC",
+                    help="bench this pipeline chain in the `lossless` "
+                         "table: a DESIGN.md §7 spec string or a "
+                         "configs.registry preset name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small datasets / single repeats for the "
+                         "`lossless` table (CI)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    names = args.names or list(TABLES)
+    unknown = [n for n in names if n not in TABLES]
+    if unknown:
+        ap.error(f"unknown table(s) {unknown}; have {list(TABLES)}")
+    pipeline = args.pipeline
+    if pipeline is not None:
+        from repro.configs.registry import get_pipeline
+        try:
+            pipeline = get_pipeline(pipeline)
+        except KeyError as e:
+            ap.error(str(e))
+        if args.names and args.names != ["lossless"]:
+            ap.error("--pipeline applies to the `lossless` table only; "
+                     f"drop {[n for n in args.names if n != 'lossless']} "
+                     "or run them separately")
+        names = ["lossless"]
     print("name,us_per_call,derived")
     for n in names:
-        TABLES[n]()
+        if n == "lossless":
+            TABLES[n](pipeline=pipeline, smoke=args.smoke)
+        else:
+            TABLES[n]()
 
 
 if __name__ == "__main__":

@@ -39,7 +39,11 @@ def main():
     bundle = build(cfg)
     opt_cfg = opt.AdamWConfig(lr=1e-3, warmup_steps=5,
                               total_steps=args.steps)
-    gc_cfg = GradCompressionConfig(eb_rel=2.0 ** -8)
+    # the cross-pod wire is a compression pipeline (DESIGN.md §7): ABS
+    # quantizer (eb overridden per-tensor by eb_rel * rms), §4 bit-pack,
+    # then the chunked zero-suppression/narrowing lossless stage
+    gc_cfg = GradCompressionConfig(
+        eb_rel=2.0 ** -8, pipeline="abs:1.0:cap=0.015625|pack:8|narrow")
     pipe = TokenPipeline(DataConfig(cfg.vocab, args.seq, args.batch))
 
     def batches():

@@ -1,27 +1,27 @@
 """Guaranteed-error-bounded gradient compression for the cross-pod
 all-reduce — the paper's quantizer on the slowest wire in the system.
 
-Design (DESIGN.md §2/§4/§5):
+Design (DESIGN.md §2/§4/§5/§7):
   * Within a pod, gradients reduce over the fast 'data'/'model' axes in
     full precision (GSPMD handles those — the links are wide).
-  * Across pods, each pod quantizes its pod-local gradient with the ABS
-    quantizer (per-tensor NOA-style bound eb = eb_rel * rms(g)) and ships
-    the PACKED wire format: bin_bits-wide bins bit-packed into uint32
-    lanes (core.codec.pack_words — same layout the fused Pallas pipeline
-    in kernels/pack.py emits) plus the capped exact-outlier (idx, payload)
-    table.  Peers unpack, dequantize, and average.  Nothing wider than the
-    packed words crosses the collective — `wire_bytes` below is the real
-    measured footprint, ~3.6x less traffic than an f32 psum at bin_bits=8
-    with the 1/64 outlier cap (benchmarks/run.py gradwire).
-  * LOSSLESS STAGE (DESIGN.md §6): with `lossless_stage` set to 'zero' or
-    'narrow', the packed words are further coded by the chunked lossless
-    scheme before the gather — all-zero chunks (the common case for
-    gradients whose values sit inside the zero bin) are dropped and the
-    rest stored at the minimal word width, exactly reversible, so the
-    bound is untouched.  XLA's static shapes force the gathered payload
-    to be padded to capacity; the honest footprint is the transmitted
-    prefix (`payload_len`), which is what `lc_wire_bytes` measures and
-    what a real transport (or a size-psum'd ragged gather) would move.
+  * Across pods, each pod quantizes its pod-local gradient through a
+    compression PIPELINE (core.pipeline, DESIGN.md §7) — an ABS quantizer
+    with a per-tensor NOA-style bound eb = eb_rel * rms(g), the §4
+    bit-pack, and any chain of lossless word stages — and all-gathers ONE
+    `Encoded` wire container.  Peers run the pipeline's exact inverse and
+    average.  Nothing wider than the final payload plane crosses the
+    collective — `CompressedShard.nbytes()` is the real measured
+    footprint (`benchmarks/run.py gradwire`/`lossless`).
+  * LOSSLESS STAGES (DESIGN.md §6/§7): with word stages in the pipeline
+    (e.g. "abs:1|pack:8|narrow" — a spec silent about cap= inherits this
+    config's outlier_cap_frac; an explicit cap= wins), the packed words
+    are further coded
+    before the gather — all-zero chunks dropped, the rest narrowed,
+    exactly reversible, so the bound is untouched.  XLA's static shapes
+    force the gathered payload to be padded to capacity; the honest
+    footprint is the transmitted prefix (`payload_len`), which is what
+    `nbytes()` measures and what a real transport (or a size-psum'd
+    ragged gather) would move.
   * ERROR FEEDBACK: the residual g - shipped is carried to the next step,
     so the long-run update is unbiased.  The paper's guarantee bounds the
     per-step residual ELEMENTWISE: |e_i| <= eb (outliers ship exactly, so
@@ -35,132 +35,188 @@ Design (DESIGN.md §2/§4/§5):
 These functions use explicit collectives over the 'pod' axis and are
 called INSIDE a shard_map set up by launch/train.py; 'data'/'model'
 sharding stays with GSPMD.
+
+The pre-pipeline forked surfaces (`compress_shard_lc`,
+`CompressedShardLC`, `lossless_stage=`) remain as thin deprecation shims
+for one PR — they emit DeprecationWarning and route through the pipeline,
+bit-identically.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantizerConfig, codec
-from repro.core.bitops import bits_to_float, float_to_bits
-from repro.core.quantizer import dequantize_abs, quantize_abs
+from repro.core import codec
+from repro.core.bitops import bits_to_float
+from repro.core.pipeline import (Encoded, Pipeline, PackStage, QuantStage,
+                                 ChunkStage, parse_pipeline)
+from repro.core.quantizer import dequantize_abs
 
 
 class GradCompressionConfig(NamedTuple):
     eb_rel: float = 2.0 ** -8       # bound relative to grad RMS
-    bin_bits: int = 8
+    bin_bits: int = 8               # used when `pipeline` is empty
     outlier_cap_frac: float = 1 / 64
     enabled: bool = True
-    lossless_stage: str = "none"    # 'none' | 'zero' | 'narrow' (§6)
+    lossless_stage: str = "none"    # DEPRECATED — set `pipeline` instead
+    pipeline: str = ""              # spec, e.g. "abs:1|pack:8|narrow";
+    #                                 the quantizer eb is a placeholder
+    #                                 (the traced per-tensor eb overrides)
+    #                                 and a spec without cap= inherits
+    #                                 outlier_cap_frac
 
-    def qcfg(self) -> QuantizerConfig:
-        return QuantizerConfig(mode="abs", error_bound=1.0,  # eb is traced
-                               bin_bits=self.bin_bits,
-                               outlier_cap_frac=self.outlier_cap_frac)
+    def pipe(self) -> Pipeline:
+        """The compression pipeline this config describes.  `pipeline`
+        wins; otherwise one is built from the legacy fields (bin_bits +
+        lossless_stage), which stay supported for one PR.  The quantizer
+        must be ABS: the wire's per-tensor bound eb_rel * rms(g) is an
+        ABS bound, and compressed_mean's gather/dequant moves exactly the
+        ABS planes (no sign plane)."""
+        if self.pipeline:
+            pipe = parse_pipeline(self.pipeline)
+            if pipe.quant.mode != "abs":
+                raise ValueError(
+                    f"the gradient wire needs an 'abs' quantizer stage "
+                    f"(per-tensor eb = eb_rel * rms overrides the spec's "
+                    f"bound); got {pipe.quant.mode!r} in {self.pipeline!r}")
+            if "cap=" not in self.pipeline:
+                # a spec that is silent about the outlier cap inherits
+                # this config's; an explicit cap= in the spec wins
+                pipe = dataclasses.replace(
+                    pipe, quant=dataclasses.replace(
+                        pipe.quant, cap=self.outlier_cap_frac))
+            return pipe
+        if self.lossless_stage != "none":
+            if self.lossless_stage not in codec.LC_STAGES:
+                raise ValueError(
+                    f"lossless_stage must be 'none' or one of "
+                    f"{codec.LC_STAGES}, got {self.lossless_stage!r}")
+            warnings.warn(
+                "GradCompressionConfig.lossless_stage is deprecated; set "
+                f"pipeline='abs:1.0:cap={self.outlier_cap_frac!r}"
+                f"|pack:{self.bin_bits}|{self.lossless_stage}'",
+                DeprecationWarning, stacklevel=2)
+            stages = (ChunkStage(self.lossless_stage),)
+        else:
+            stages = ()
+        return Pipeline(QuantStage("abs", 1.0, self.outlier_cap_frac),
+                        PackStage(self.bin_bits), stages)
+
+    def qcfg(self):
+        return self.pipe().qcfg()
 
 
-class CompressedShard(NamedTuple):
-    """One pod's wire payload — exactly the arrays the all-gather moves."""
-    words: jnp.ndarray       # uint32[n_words] packed bins
-    out_idx: jnp.ndarray     # int32[K], n = empty
-    out_payload: jnp.ndarray  # uint32[K] exact IEEE bits
-    eb: jnp.ndarray          # f32 scalar per-tensor bound
-    n_outliers: jnp.ndarray  # int32 scalar (header; not gathered)
+@jax.tree_util.register_pytree_node_class
+class CompressedShard:
+    """One pod's wire payload — an `Encoded` container plus its (static)
+    pipeline and element count.  The arrays inside `enc` are exactly what
+    the all-gather moves; the legacy field names (`words`,
+    `header_words`, `payload`, ...) remain as read-only views."""
 
-    def nbytes(self) -> int:
-        """Measured per-pod wire footprint of one all-gather."""
-        return (self.words.size * 4 + self.out_idx.size * 4
-                + self.out_payload.size * 4 + 4 + 4)
+    def __init__(self, enc: Encoded, pipe: Pipeline, n: int):
+        self.enc = enc
+        self.pipe = pipe
+        self.n = n
 
+    def tree_flatten(self):
+        return (self.enc,), (self.pipe, self.n)
 
-class CompressedShardLC(NamedTuple):
-    """CompressedShard after the device-side lossless stage (DESIGN.md §6).
-    `payload` is padded to static capacity; the transmitted prefix is
-    `payload_len` words and `nbytes()` counts exactly that."""
-    header_words: jnp.ndarray  # uint32 — 2-bit per-chunk width codes
-    payload: jnp.ndarray       # uint32[capacity], tail zero
-    payload_len: jnp.ndarray   # int32 scalar — words actually used
-    out_idx: jnp.ndarray       # int32[K], n = empty
-    out_payload: jnp.ndarray   # uint32[K] exact IEEE bits
-    eb: jnp.ndarray            # f32 scalar per-tensor bound
-    n_outliers: jnp.ndarray    # int32 scalar (header; not gathered)
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
 
+    # --- legacy field views ------------------------------------------------
+    @property
+    def words(self):
+        """The §4 packed bin plane.  For a staged pipeline this decodes
+        the word stages (exact inverses), so it is ALWAYS the same
+        bit-identical plane a stage-free pipeline would ship."""
+        if self.pipe.stages:
+            return self.pipe.decode_words(self.enc.headers,
+                                          self.enc.payload,
+                                          self.pipe.n_words(self.n))
+        return self.enc.payload
+
+    @property
+    def header_words(self):
+        """The first non-empty stage header plane (legacy
+        CompressedShardLC semantics: the chunk coder's width codes)."""
+        for h in self.enc.headers:
+            if h.size:
+                return h
+        raise AttributeError(
+            f"pipeline {self.pipe.spec()!r} has no header planes")
+
+    @property
+    def payload(self):
+        return self.enc.payload
+
+    @property
+    def payload_len(self):
+        return self.enc.payload_len
+
+    @property
+    def out_idx(self):
+        return self.enc.out_idx
+
+    @property
+    def out_payload(self):
+        return self.enc.out_payload
+
+    @property
+    def eb(self):
+        return self.enc.eb
+
+    @property
+    def n_outliers(self):
+        return self.enc.n_outliers
+
+    # --- accounting --------------------------------------------------------
     def nbytes(self):
-        """Measured per-pod transmitted footprint (traced: the payload is
-        variable-length; +4 for the transmitted length itself).  Header
-        content words only, f32 accumulation — see EncodedLC.wire_bits."""
-        n_chunks = self.payload.size // codec.LC_CHUNK
-        return (4.0 * self.payload_len.astype(jnp.float32)
-                + codec.lc_header_content_words(n_chunks) * 4 + 4
-                + self.out_idx.size * 4 + self.out_payload.size * 4 + 4 + 4)
+        """Measured per-pod transmitted footprint of one all-gather: a
+        static int for static chains, traced (data-dependent) with a
+        length-variable lossless stage — see Pipeline.wire_bits."""
+        return self.pipe.wire_bytes(self.enc, self.n)
 
     def capacity_nbytes(self) -> int:
         """Static upper bound — what the padded all-gather buffer holds."""
-        return (self.header_words.size * 4 + self.payload.size * 4 + 4
-                + self.out_idx.size * 4 + self.out_payload.size * 4 + 4 + 4)
+        return self.pipe.capacity_bytes(self.enc)
 
 
 def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig):
-    """Quantize + pack one pod-local gradient.  Returns (CompressedShard,
-    Quantized) — the second carries outlier/recon planes that stay LOCAL
-    (residual bookkeeping); only the shard's arrays go on the wire."""
-    qc = cfg.qcfg()
+    """Run one pod-local gradient through the compression pipeline.
+    Returns (CompressedShard, Quantized) — the second carries the local
+    outlier/recon planes (residual bookkeeping); only the shard's arrays
+    go on the wire."""
+    pipe = cfg.pipe()
     flat = g.reshape(-1).astype(jnp.float32)
-    n = flat.size
-    k = max(1, int(n * cfg.outlier_cap_frac))
     rms = jnp.sqrt(jnp.mean(flat * flat))
     eb = jnp.asarray(cfg.eb_rel, jnp.float32) * rms
-
-    q = quantize_abs(flat, qc, eb=eb)
-    n_out = jnp.sum(q.outlier).astype(jnp.int32)
-    (idx,) = jnp.nonzero(q.outlier, size=k, fill_value=n)
-    payload = jnp.where(idx < n,
-                        float_to_bits(flat)[jnp.minimum(idx, n - 1)], 0)
-    words = codec.pack_words(q.bins, cfg.bin_bits)
-    shard = CompressedShard(words, idx.astype(jnp.int32),
-                            payload.astype(jnp.uint32), eb, n_out)
-    return shard, q
-
-
-def compress_shard_lc(g: jnp.ndarray, cfg: GradCompressionConfig):
-    """compress_shard + the device-side lossless stage over the packed
-    words.  Returns (CompressedShardLC, Quantized); decoding the shard's
-    arrays reproduces the packed words bit-for-bit, so every guarantee of
-    compress_shard carries over."""
-    if cfg.lossless_stage not in codec.LC_STAGES:
-        raise ValueError(
-            f"compress_shard_lc needs lossless_stage in {codec.LC_STAGES}, "
-            f"got {cfg.lossless_stage!r} (use compress_shard for 'none')")
-    shard, q = compress_shard(g, cfg)
-    hw, payload, plen = codec.encode_words_lc(shard.words, cfg.lossless_stage)
-    return CompressedShardLC(hw, payload, plen, shard.out_idx,
-                             shard.out_payload, shard.eb,
-                             shard.n_outliers), q
+    enc, q = pipe.encode(flat, eb=eb, return_quantized=True)
+    return CompressedShard(enc, pipe, flat.size), q
 
 
 def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
     """Compressed mean of g over the `axis` collective (call inside
     shard_map).  Returns (mean, residual) — residual is THIS shard's
     error-feedback term, elementwise bounded by eb."""
-    qc = cfg.qcfg()
+    pipe = cfg.pipe()
+    qc = pipe.qcfg()
     flat = g.reshape(-1).astype(jnp.float32)
     n = flat.size
-    k = max(1, int(n * cfg.outlier_cap_frac))
-    n_words = codec.packed_word_count(n, cfg.bin_bits)
-    lossless = cfg.lossless_stage != "none"      # static (python) branch
-    if lossless:
-        shard, q = compress_shard_lc(g, cfg)
-    else:
-        shard, q = compress_shard(g, cfg)
+    n_words = pipe.n_words(n)
+    shard, q = compress_shard(g, cfg)
     # all pods must take the same branch: agree by pmax
-    any_overflow = jax.lax.pmax((shard.n_outliers > k).astype(jnp.int32),
+    any_overflow = jax.lax.pmax(shard.enc.overflow.astype(jnp.int32),
                                 axis) > 0
     p = jax.lax.psum(1, axis)        # axis size (jax.lax.axis_size compat)
 
     def dequant_one(w, e, ii, pp):
-        bins = codec.unpack_words(w, n, cfg.bin_bits)
+        bins = codec.unpack_words(w, n, qc.bin_bits)
         vals = dequantize_abs(bins, qc, eb=e, dtype=jnp.float32)
         exact = bits_to_float(pp.astype(jnp.int32), jnp.float32)
         # mode='drop' discards empty slots (ii == n).  NEVER clamp them
@@ -171,19 +227,20 @@ def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
         return vals.at[ii].set(exact, mode="drop")
 
     def compressed_path(_):
-        eb_all = jax.lax.all_gather(shard.eb, axis)
-        idx_all = jax.lax.all_gather(shard.out_idx, axis)
-        pay_all = jax.lax.all_gather(shard.out_payload, axis)
-        if lossless:
-            # the padded payload is gathered for shape-static XLA; the
-            # transmitted size is shard.nbytes() (payload_len words)
-            hw_all = jax.lax.all_gather(shard.header_words, axis)
-            lcp_all = jax.lax.all_gather(shard.payload, axis)
+        eb_all = jax.lax.all_gather(shard.enc.eb, axis)
+        idx_all = jax.lax.all_gather(shard.enc.out_idx, axis)
+        pay_all = jax.lax.all_gather(shard.enc.out_payload, axis)
+        if pipe.stages:
+            # the padded payload and per-stage header planes are gathered
+            # for shape-static XLA; the transmitted size is shard.nbytes()
+            hdrs_all = jax.tree.map(
+                lambda h: jax.lax.all_gather(h, axis), shard.enc.headers)
+            pw_all = jax.lax.all_gather(shard.enc.payload, axis)
             words_all = jax.vmap(
-                lambda hw, pw: codec.decode_words_lc(hw, pw, n_words))(
-                    hw_all, lcp_all)
+                lambda hs, pw: pipe.decode_words(hs, pw, n_words))(
+                    hdrs_all, pw_all)
         else:
-            words_all = jax.lax.all_gather(shard.words, axis)  # uint32 wire
+            words_all = jax.lax.all_gather(shard.enc.payload, axis)
 
         return jnp.sum(jax.vmap(dequant_one)(words_all, eb_all, idx_all,
                                              pay_all), axis=0)
@@ -214,18 +271,51 @@ def compressed_mean_tree(grads, residuals, cfg: GradCompressionConfig,
 
 
 def wire_bytes(n_elems: int, cfg: GradCompressionConfig) -> int:
-    """PACKED wire footprint per pod per tensor — matches
-    CompressedShard.nbytes() exactly (packed uint32 words + capped
-    (idx, payload) table + header).  With a lossless stage the footprint
-    becomes data-dependent and this is its upper bound (modulo the small
-    header plane); use lc_wire_bytes for the measured size."""
-    n_words = codec.packed_word_count(n_elems, cfg.bin_bits)
-    k = max(1, int(n_elems * cfg.outlier_cap_frac))
+    """Analytic PACKED wire footprint per pod per tensor — matches
+    CompressedShard.nbytes() for a stage-free pipeline (packed uint32
+    words + capped (idx, payload) table + header).  With lossless stages
+    the footprint becomes data-dependent and this is its upper bound
+    (modulo the small header planes); use shard.nbytes() for the
+    measured size."""
+    pipe = cfg.pipe()
+    qc = pipe.qcfg()
+    n_words = pipe.n_words(n_elems)
+    k = qc.outlier_cap(n_elems)
     return n_words * 4 + k * 8 + 8
 
 
-def lc_wire_bytes(shard: CompressedShardLC):
+# ---------------------------------------------------------------------------
+# deprecation shims (one PR): the pre-pipeline forked *_lc surfaces
+# ---------------------------------------------------------------------------
+
+def compress_shard_lc(g: jnp.ndarray, cfg: GradCompressionConfig):
+    """DEPRECATED — set GradCompressionConfig.pipeline (or lossless_stage)
+    and call compress_shard; this shim routes there bit-identically."""
+    warnings.warn(
+        "compress_shard_lc is deprecated; use compress_shard with a "
+        "pipeline spec (GradCompressionConfig.pipeline)",
+        DeprecationWarning, stacklevel=2)
+    if cfg.lossless_stage not in codec.LC_STAGES and not cfg.pipeline:
+        raise ValueError(
+            f"compress_shard_lc needs lossless_stage in {codec.LC_STAGES}, "
+            f"got {cfg.lossless_stage!r} (use compress_shard for 'none')")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return compress_shard(g, cfg)
+
+
+def lc_wire_bytes(shard: CompressedShard):
     """Measured transmitted footprint of one lossless-coded shard (traced
     scalar — the payload length is data-dependent).  The gathered buffer
     is padded to shard.capacity_nbytes(); a real transport moves this."""
     return shard.nbytes()
+
+
+def __getattr__(name):
+    if name == "CompressedShardLC":
+        warnings.warn(
+            "CompressedShardLC is deprecated; compress_shard returns the "
+            "unified CompressedShard for any pipeline",
+            DeprecationWarning, stacklevel=2)
+        return CompressedShard
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,20 +28,23 @@ Two representations:
   * QuantizedKV — int8 bins [..., S, D]: the DECODE layout.  The Pallas
     attention kernel (kernels/kv_attention.py) streams these blocks
     directly; int8 lanes are what the VPU dequantizes cheapest.
-  * PackedKV — the WIRE layout (DESIGN.md §4): per-page bins bit-packed
-    into uint32 lanes via core.codec.pack_words.  This is what cache
+  * PackedKV — the ONE wire layout (DESIGN.md §4/§7): per-page bins
+    bit-packed into uint32 lanes via core.codec.pack_words, optionally
+    run through any chain of pipeline word stages (DESIGN.md §7 —
+    `pack_kv(q, stages="narrow")`, `stages="shuffle|narrow"`, ...) coded
+    PER PAGE so pages stay independently migratable.  This is what cache
     migration / prefill->decode disaggregation ships between hosts;
-    pack_kv/unpack_kv round-trip bit-exactly, and `kv_wire_bytes` is the
-    measured footprint of exactly those arrays.
-  * PackedKVLC — PackedKV after the device-side lossless stage
-    (DESIGN.md §6), coded per page so pages stay independently
-    migratable.  Zero chunks dominate padded / unwritten cache regions
-    and narrow chunks cut attention-sink-free pages; pack_kv_lc /
-    unpack_kv_lc round-trip bit-exactly and `PackedKVLC.wire_nbytes()`
-    is the measured (data-dependent) transmitted footprint.
+    pack_kv/unpack_kv round-trip bit-exactly for every stage chain.
+    Zero chunks dominate padded / unwritten cache regions and narrow
+    chunks cut attention-sink-free pages; `nbytes()` is the static
+    stage-free footprint and `wire_nbytes()` the measured
+    (data-dependent) transmitted one.  The pre-pipeline `pack_kv_lc` /
+    `unpack_kv_lc` / `gather_kv_packed_lc` / `PackedKVLC` surfaces
+    remain as deprecation shims for one PR.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -49,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, codec
 from repro.core.bitops import pow2_floor
+from repro.core.pipeline import ChunkStage, parse_word_stages
 from repro.core.quantizer import quantize_abs
 
 
@@ -125,119 +129,211 @@ def dequantize_kv(q: QuantizedKV, *, page: int = 128,
     return out.reshape(*lead, S, D)
 
 
-class PackedKV(NamedTuple):
-    """Wire form of QuantizedKV: bins bit-packed 4/word into uint32 lanes.
-    Everything here is what a cache transfer actually moves."""
-    words: jnp.ndarray     # uint32 [..., n_pages, page*D // 4]
-    eb2: jnp.ndarray       # f32   [..., n_pages]
-    out_idx: jnp.ndarray   # int32 [..., n_pages, cap]
-    out_val: jnp.ndarray   # f32   [..., n_pages, cap]
-    overflow: jnp.ndarray  # bool  [..., n_pages]
+def _word_stages(stages) -> tuple:
+    """Resolve a word-stage chain given as a spec fragment ("narrow",
+    "shuffle|narrow", "zero") or a tuple of stage objects — the shared
+    pipeline parser.  KV pages pack at 8 bits/value, so bare `shuffle`
+    folds at width 8."""
+    return parse_word_stages(stages, 8)
 
+
+@jax.tree_util.register_pytree_node_class
+class PackedKV:
+    """The ONE wire form of QuantizedKV: per-page packed words, run
+    through a (possibly empty, static) word-stage chain.  Everything in
+    the arrays is what a cache transfer actually moves; `payload` is
+    padded to the static per-page capacity when a stage is
+    length-variable and the transmitted prefix per page is
+    `payload_len`."""
+
+    def __init__(self, payload, payload_len, headers, eb2, out_idx,
+                 out_val, overflow, *, stages=()):
+        self.payload = payload        # uint32 [..., n_pages, cap_words]
+        self.payload_len = payload_len  # int32 [..., n_pages]
+        self.headers = headers        # tuple of uint32 [..., n_pages, hw]
+        self.eb2 = eb2                # f32   [..., n_pages]
+        self.out_idx = out_idx        # int32 [..., n_pages, cap]
+        self.out_val = out_val        # f32   [..., n_pages, cap]
+        self.overflow = overflow      # bool  [..., n_pages]
+        self.stages = stages
+
+    def tree_flatten(self):
+        return ((self.payload, self.payload_len, self.headers, self.eb2,
+                 self.out_idx, self.out_val, self.overflow), (self.stages,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, stages=aux[0])
+
+    # --- legacy field views ------------------------------------------------
+    @property
+    def words(self):
+        return self.payload
+
+    @property
+    def header_words(self):
+        """The first non-empty stage header plane (legacy PackedKVLC
+        semantics: the chunk coder's width codes)."""
+        for h in self.headers:
+            if h.shape[-1]:
+                return h
+        raise AttributeError("this PackedKV has no header planes")
+
+    # --- accounting --------------------------------------------------------
     def nbytes(self) -> int:
-        return (self.words.size * 4 + self.eb2.size * 4
+        """Static stored footprint: for a stage-free chain this IS the
+        wire (legacy PackedKV accounting); with stages it is the padded
+        capacity an all-gather buffer holds."""
+        b = (self.payload.size + self.eb2.size + self.out_idx.size
+             + self.out_val.size) * 4 + self.overflow.size
+        b += sum(h.size for h in self.headers) * 4
+        if self.stages:
+            b += self.payload_len.size * 4
+        return b
+
+    def wire_nbytes(self):
+        """Measured transmitted footprint (traced when a stage is
+        length-variable; +4/page for the transmitted length itself).  Per
+        page each stage costs its header CONTENT words only — not the
+        tile-padded stored plane (zeros the receiver re-pads); f32
+        accumulation, see EncodedLC.wire_bits."""
+        cap = self.payload.shape[-1]
+        n_pages = self.payload_len.size
+        per_page = sum(st.header_content_bits(cap)
+                       for st in self.stages) // 8
+        if self.stages and self.stages[-1].transmits_len:
+            per_page += 4
+            pay = 4.0 * jnp.sum(self.payload_len.astype(jnp.float32))
+        else:
+            pay = 4 * self.payload.size
+        return (n_pages * per_page + pay + self.eb2.size * 4
                 + self.out_idx.size * 4 + self.out_val.size * 4
                 + self.overflow.size)
 
 
-def pack_kv(q: QuantizedKV, *, page: int = 128) -> PackedKV:
-    """Bit-pack a quantized cache for the wire.  Requires page*D % 512 == 0
-    (whole uint32 tiles per page; page=128 needs D % 4 == 0)."""
+def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
+    """Bit-pack a quantized cache for the wire, optionally through a
+    word-stage chain coded per page (stages="narrow", "shuffle|narrow",
+    ...).  Requires page*D % 512 == 0 (whole uint32 tiles per page;
+    page=128 needs D % 4 == 0), and each stage must preserve the page
+    word count (whole LC chunks per page — D % 16 == 0 at page=128 for
+    zero/narrow) so pages stay self-describing."""
+    from repro.core.pipeline import encode_word_stages, word_stage_sizes
+
+    st = _word_stages(stages)
     *lead, s, d = q.bins.shape
     n_pages = s // page
     per = page * d
     assert per % (4 * codec.PACK_LANES) == 0, (page, d)
     flat = q.bins.reshape(-1, per).astype(jnp.int32)
     words = jax.vmap(lambda b: codec.pack_words(b, 8))(flat)
-    return PackedKV(words.reshape(*lead, n_pages, per // 4), q.eb2,
-                    q.out_idx, q.out_val, q.overflow)
+    wpp = per // 4
+    if not st:
+        plen = jnp.full((*lead, n_pages), wpp, jnp.int32)
+        return PackedKV(words.reshape(*lead, n_pages, wpp), plen, (),
+                        q.eb2, q.out_idx, q.out_val, q.overflow)
+    sizes = word_stage_sizes(st, wpp)
+    assert all(sz == wpp for sz in sizes), (
+        "stage chain must preserve the per-page word count so pages stay "
+        "self-describing", page, d, sizes)
+    headers, payload, plen = jax.vmap(
+        lambda w: encode_word_stages(st, w, wpp))(words)
+    # explicit last dim: headerless stages carry shape (0,) planes
+    headers = tuple(h.reshape(*lead, n_pages, h.shape[-1]) for h in headers)
+    return PackedKV(payload.reshape(*lead, n_pages, -1),
+                    plen.reshape(*lead, n_pages), headers, q.eb2,
+                    q.out_idx, q.out_val, q.overflow, stages=st)
 
 
 def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
-    """Inverse of pack_kv (bit-exact): restore the int8 decode layout."""
-    *lead, n_pages, wpp = p.words.shape
+    """Inverse of pack_kv (bit-exact for every stage chain): restore the
+    int8 decode layout."""
+    from repro.core.pipeline import decode_word_stages
+
+    *lead, n_pages, wpp = p.payload.shape
+    if p.stages:
+        batch = p.payload.size // wpp
+        hdrs = tuple(h.reshape(batch, h.shape[-1]) for h in p.headers)
+        pay = p.payload.reshape(-1, wpp)
+        words = jax.vmap(
+            lambda hs, w: decode_word_stages(p.stages, hs, w, wpp))(
+                hdrs, pay)
+    else:
+        words = p.payload.reshape(-1, wpp)
     per = wpp * 4
     d = per // page
-    flat = p.words.reshape(-1, wpp)
-    bins = jax.vmap(lambda w: codec.unpack_words(w, per, 8))(flat)
+    bins = jax.vmap(lambda w: codec.unpack_words(w, per, 8))(
+        words.reshape(-1, wpp))
     bins = bins.astype(jnp.int8).reshape(*lead, n_pages * page, d)
     return QuantizedKV(bins, p.eb2, p.out_idx, p.out_val, p.overflow)
-
-
-class PackedKVLC(NamedTuple):
-    """Wire form of PackedKV after the lossless stage, coded PER PAGE so
-    any subset of pages can be shipped independently.  `payload` is padded
-    to page capacity for XLA; the transmitted prefix per page is
-    `payload_len` words and wire_nbytes() counts exactly those."""
-    header_words: jnp.ndarray  # uint32 [..., n_pages, hw_per_page]
-    payload: jnp.ndarray       # uint32 [..., n_pages, page*D // 4]
-    payload_len: jnp.ndarray   # int32  [..., n_pages]
-    eb2: jnp.ndarray           # f32   [..., n_pages]
-    out_idx: jnp.ndarray       # int32 [..., n_pages, cap]
-    out_val: jnp.ndarray       # f32   [..., n_pages, cap]
-    overflow: jnp.ndarray      # bool  [..., n_pages]
-
-    def wire_nbytes(self):
-        """Measured transmitted footprint (traced: payload is variable-
-        length; +4/page for the transmitted length itself).  Per page the
-        header costs its content words only — ceil(n_chunks/16) uint32,
-        4 B at page=128/D=64 — not the tile-padded stored plane (zeros the
-        receiver re-pads); f32 accumulation, see EncodedLC.wire_bits."""
-        n_chunks = self.payload.shape[-1] // codec.LC_CHUNK
-        n_pages = self.payload_len.size
-        return (n_pages * (codec.lc_header_content_words(n_chunks) * 4 + 4)
-                + 4.0 * jnp.sum(self.payload_len.astype(jnp.float32))
-                + self.eb2.size * 4 + self.out_idx.size * 4
-                + self.out_val.size * 4 + self.overflow.size)
-
-
-def pack_kv_lc(q: QuantizedKV, *, page: int = 128,
-               stage: str = "narrow") -> PackedKVLC:
-    """pack_kv + the device-side lossless stage over each page's words.
-    Requires whole LC chunks per page — page*D % (4*LC_CHUNK) == 0, i.e.
-    D % 16 == 0 at page=128 — so the per-page payload capacity equals the
-    page's word count and pages stay self-describing."""
-    p = pack_kv(q, page=page)
-    *lead, n_pages, wpp = p.words.shape
-    assert wpp % codec.LC_CHUNK == 0, (page, wpp)
-    flat = p.words.reshape(-1, wpp)
-    hw, payload, plen = jax.vmap(
-        lambda w: codec.encode_words_lc(w, stage))(flat)
-    return PackedKVLC(hw.reshape(*lead, n_pages, -1),
-                      payload.reshape(*lead, n_pages, -1),
-                      plen.reshape(*lead, n_pages), p.eb2, p.out_idx,
-                      p.out_val, p.overflow)
-
-
-def unpack_kv_lc(p: PackedKVLC, *, page: int = 128) -> QuantizedKV:
-    """Inverse of pack_kv_lc (bit-exact)."""
-    *lead, n_pages, cap_words = p.payload.shape
-    hw = p.header_words.reshape(-1, p.header_words.shape[-1])
-    pay = p.payload.reshape(-1, cap_words)
-    words = jax.vmap(
-        lambda h, w: codec.decode_words_lc(h, w, cap_words))(hw, pay)
-    packed = PackedKV(words.reshape(*lead, n_pages, cap_words), p.eb2,
-                      p.out_idx, p.out_val, p.overflow)
-    return unpack_kv(packed, page=page)
 
 
 def gather_kv_packed(p: PackedKV, axis: str) -> PackedKV:
     """All-gather a packed cache over a mesh axis (prefill->decode
     disaggregation: every decode host receives every prefill shard's pages
-    in wire form).  Call inside shard_map; leading axis of every field
-    becomes the axis size."""
-    g = lambda a: jax.lax.all_gather(a, axis)
-    return PackedKV(g(p.words), g(p.eb2), g(p.out_idx), g(p.out_val),
-                    g(p.overflow))
+    in wire form).  Call inside shard_map; leading axis of every array
+    becomes the axis size.  With word stages the padded payload plane is
+    gathered for shape-static XLA; the honest transfer size is
+    wire_nbytes() (see the grads.py note on length transmission)."""
+    return jax.tree.map(lambda a: jax.lax.all_gather(a, axis), p)
 
 
-def gather_kv_packed_lc(p: PackedKVLC, axis: str) -> PackedKVLC:
-    """gather_kv_packed for the lossless-coded wire form.  The padded
-    payload plane is gathered for shape-static XLA; the honest transfer
-    size is wire_nbytes() (see the grads.py note on length transmission)."""
-    g = lambda a: jax.lax.all_gather(a, axis)
-    return PackedKVLC(g(p.header_words), g(p.payload), g(p.payload_len),
-                      g(p.eb2), g(p.out_idx), g(p.out_val), g(p.overflow))
+# ---------------------------------------------------------------------------
+# deprecation shims (one PR): the pre-pipeline forked *_lc surfaces
+# ---------------------------------------------------------------------------
+
+def _warn_lc(old: str, new: str):
+    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
+                  stacklevel=3)
+
+
+def pack_kv_lc(q: QuantizedKV, *, page: int = 128,
+               stage: str = "narrow") -> PackedKV:
+    """DEPRECATED — pack_kv(q, stages=<chain>) covers any stage chain."""
+    _warn_lc("pack_kv_lc", f"pack_kv(q, stages={stage!r})")
+    return pack_kv(q, page=page, stages=stage)
+
+
+def unpack_kv_lc(p: PackedKV, *, page: int = 128) -> QuantizedKV:
+    """DEPRECATED — unpack_kv inverts every stage chain."""
+    _warn_lc("unpack_kv_lc", "unpack_kv")
+    return unpack_kv(p, page=page)
+
+
+def gather_kv_packed_lc(p: PackedKV, axis: str) -> PackedKV:
+    """DEPRECATED — gather_kv_packed gathers every wire form."""
+    _warn_lc("gather_kv_packed_lc", "gather_kv_packed")
+    return gather_kv_packed(p, axis)
+
+
+@jax.tree_util.register_pytree_node_class
+class _LegacyPackedKVLC(PackedKV):
+    """Construction shim: accepts the pre-pipeline PackedKVLC NamedTuple
+    field order (header_words first) and maps it onto the unified
+    PackedKV — a positional legacy construction must not silently
+    misassign planes.  The stage identity is irrelevant to decode (the
+    2-bit header codes are self-describing), so 'narrow' stands in.
+    Instances flatten back to plain PackedKV."""
+
+    def __init__(self, header_words, payload, payload_len, eb2, out_idx,
+                 out_val, overflow):
+        super().__init__(payload, payload_len, (header_words,), eb2,
+                         out_idx, out_val, overflow,
+                         stages=(ChunkStage("narrow"),))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return PackedKV(*children, stages=aux[0])
+
+
+def __getattr__(name):
+    if name == "PackedKVLC":
+        warnings.warn(
+            "PackedKVLC is deprecated; pack_kv returns the unified "
+            "PackedKV for any stage chain", DeprecationWarning,
+            stacklevel=2)
+        return _LegacyPackedKVLC
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def kv_wire_bytes(shape, *, page: int = 128, cap: int = 8) -> int:

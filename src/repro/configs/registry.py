@@ -1,8 +1,11 @@
-"""The 10 assigned architectures, exact public configs.
+"""The 10 assigned architectures (exact public configs) and the named
+compression-pipeline presets.
 
 Sources are cited per entry ([arXiv/hf; verification tier] from the
 assignment).  `get(name)` is the single lookup used by launchers, smoke
-tests, dry-run, and benchmarks (--arch <id>).
+tests, dry-run, and benchmarks (--arch <id>); `get_pipeline(name)` is
+the same single lookup for pipeline specs (DESIGN.md §7) — benchmarks'
+`--pipeline` accepts either a preset name or a raw spec string.
 """
 from __future__ import annotations
 
@@ -81,3 +84,34 @@ def get(name: str) -> ArchConfig:
 
 def all_archs():
     return dict(ARCHS)
+
+
+# --------------------------------------------------- pipeline presets -----
+#
+# Named specs for the common chains (DESIGN.md §7).  The gradient-wire
+# presets use eb=1 as a placeholder — compression/grads.py overrides it
+# with the traced per-tensor bound eb_rel * rms(g) at encode time.
+
+PIPELINES = {
+    # gradient all-reduce wires (cap = 1/64, GradCompressionConfig default)
+    "grad-wire-8": "abs:1.0:cap=0.015625|pack:8",
+    "grad-wire-8-narrow": "abs:1.0:cap=0.015625|pack:8|narrow",
+    "grad-wire-16-zero": "abs:1.0:cap=0.015625|pack:16|zero",
+    "grad-wire-16-narrow": "abs:1.0:cap=0.015625|pack:16|narrow",
+    # scientific-data archival-grade device chains (paper eval bound 1e-3)
+    "sci-abs-narrow": "abs:0.001|pack:32|narrow",
+    "sci-rel-narrow": "rel:0.001|pack:32|narrow",
+    "sci-rel-shuffle": "rel:0.001|pack:32|shuffle|narrow",
+    # the full chain exercised by CI's smoke step
+    "smoke-chain": "rel:0.001|pack:8|zero|narrow",
+}
+
+
+def get_pipeline(name: str) -> str:
+    """Resolve a preset name OR pass through a raw spec ('|' present)."""
+    if name in PIPELINES:
+        return PIPELINES[name]
+    if "|" in name:
+        return name
+    raise KeyError(f"unknown pipeline preset {name!r}; have "
+                   f"{sorted(PIPELINES)} (or pass a '|'-spec)")

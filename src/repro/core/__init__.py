@@ -3,11 +3,14 @@ contribution), as a composable JAX module.
 
 Public API:
     QuantizerConfig             — mode ('abs'|'rel'|'noa'), error bound, widths
+    Pipeline / parse_pipeline   — LC-style composable chain + spec strings (§7)
+    Encoded                     — the one pipeline wire container (§7)
     quantize / Quantized        — bins + outlier flags + recon (jit-safe)
     encode_dense/decode_dense   — fixed-shape codec, outliers stored densely
     encode_compact/decode_compact — capped compact outliers (wire format)
     encode_packed/decode_packed — bins bit-packed into uint32 lanes (§4)
     encode_lossless/decode_lossless — device-side lossless stage (§6)
+    shuffle_words/unshuffle_words — zigzag+byte-plane shuffle stage (§7)
     serialize/deserialize       — host byte stream (LC-style inline outliers)
     log2approx/pow2approx       — parity-safe transcendental replacements
 """
@@ -18,9 +21,12 @@ from .codec import (LC_CHUNK, LC_STAGES, EncodedCompact, EncodedDense,
                     encode_compact, encode_dense, encode_lossless,
                     encode_packed, encode_words_lc, lc_chunk_count,
                     lc_header_words, pack_flags, pack_words,
-                    packed_word_count, roundtrip_dense, unpack_flags,
-                    unpack_words)
+                    packed_word_count, roundtrip_dense, shuffle_word_count,
+                    shuffle_words, unpack_flags, unpack_words,
+                    unshuffle_words)
 from .config import QuantizerConfig
+from .pipeline import (STAGES, Encoded, Pipeline, parse_pipeline,
+                       register_stage)
 from .quantizer import (Quantized, dequantize_abs, dequantize_rel, quantize,
                         quantize_abs, quantize_abs_unprotected, quantize_noa,
                         quantize_rel, quantize_rel_library)
@@ -36,6 +42,8 @@ __all__ = [
     "EncodedCompact", "EncodedPacked", "EncodedLC", "encode_lossless",
     "decode_lossless", "encode_words_lc", "decode_words_lc",
     "lc_chunk_count", "lc_header_words", "LC_CHUNK", "LC_STAGES",
+    "shuffle_words", "unshuffle_words", "shuffle_word_count",
+    "Pipeline", "parse_pipeline", "Encoded", "STAGES", "register_stage",
     "serialize", "deserialize", "compression_ratio",
     "log2approx", "pow2approx", "float_to_bits", "bits_to_float",
 ]

@@ -215,6 +215,84 @@ def pack_flags(flags: jnp.ndarray) -> jnp.ndarray:
     return pack_words(flags.astype(jnp.uint32), 1)
 
 
+# ---------------------------------------------------------------------------
+# SHUFFLE — byte-plane shuffle with zigzag sign-fold (a lossless word stage)
+# ---------------------------------------------------------------------------
+#
+# Two's-complement small negatives (0xFF.. sign extension) set the high
+# bits of every word they touch, so the §6 width codes never fire on
+# mixed-sign bin streams.  The shuffle stage (DESIGN.md §7) fixes that in
+# two exactly-reversible moves, the byte-level analogue of FZ-GPU's
+# bitshuffle (arXiv 2304.12557):
+#
+#   1. ZIGZAG fold each `width`-bit lane: z = (v << 1) ^ (v >> width-1),
+#      so small |v| of EITHER sign has small z (clear high bytes);
+#   2. byte-plane TRANSPOSE (width < 32): byte j of every lane becomes a
+#      contiguous plane, so the cleared high bytes form whole all-zero
+#      chunks the §6 coder drops.  At width == 32 a lane IS a word and the
+#      §6 width codes already select trailing zero byte planes, so the
+#      transpose is the identity and only the fold is applied — which is
+#      exactly what makes `narrow` chunks fire on mixed-sign bins.
+#
+# The stream is padded to whole PACK_LANES tiles (zeros fold to zeros, so
+# truncation on decode is exact); output length = shuffle_word_count(n).
+
+
+def _width_mask(width: int) -> jnp.ndarray:
+    return jnp.uint32(0xFFFFFFFF if width == 32 else (1 << width) - 1)
+
+
+def _zigzag(lanes: jnp.ndarray, width: int) -> jnp.ndarray:
+    """uint32 lanes holding width-bit two's complement -> zigzag codes."""
+    sh = jnp.int32(32 - width)
+    v = (lanes.astype(jnp.int32) << sh) >> sh          # sign-extend
+    z = (v << jnp.int32(1)) ^ (v >> jnp.int32(31))
+    return z.astype(jnp.uint32) & _width_mask(width)
+
+
+def _unzigzag(z: jnp.ndarray, width: int) -> jnp.ndarray:
+    v = (z >> jnp.uint32(1)) ^ (jnp.uint32(0) - (z & jnp.uint32(1)))
+    return v & _width_mask(width)
+
+
+def shuffle_word_count(n_words: int) -> int:
+    """Words `shuffle_words` emits for an n_words stream (tile-padded)."""
+    return -(-n_words // PACK_LANES) * PACK_LANES
+
+
+def shuffle_words(words: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Fold + byte-plane-shuffle a packed uint32 word stream whose lanes
+    are `width`-bit values (width in {8, 16, 32}).  jit-safe, exact
+    inverse is unshuffle_words."""
+    if width not in (8, 16, 32):
+        raise ValueError(f"shuffle width must be 8, 16 or 32, got {width}")
+    n_words = words.shape[0]
+    npad = shuffle_word_count(n_words)
+    w = jnp.pad(words, (0, npad - n_words))
+    if width == 32:
+        return _zigzag(w, 32)
+    lanes = unpack_words(w, npad * 32 // width, width, signed=False)
+    z = _zigzag(lanes, width)
+    planes = [(z >> jnp.uint32(8 * j)) & jnp.uint32(0xFF)
+              for j in range(width // 8)]
+    return pack_words(jnp.concatenate(planes), 8)
+
+
+def unshuffle_words(shuffled: jnp.ndarray, n_words: int,
+                    width: int) -> jnp.ndarray:
+    """Exact inverse of shuffle_words; n_words is the pre-shuffle count."""
+    npad = shuffle_word_count(n_words)
+    if width == 32:
+        return _unzigzag(shuffled[:npad], 32)[:n_words]
+    n_lanes = npad * 32 // width
+    stream = unpack_words(shuffled, 4 * npad, 8, signed=False)
+    planes = stream.reshape(width // 8, n_lanes)
+    z = planes[0]
+    for j in range(1, width // 8):
+        z = z | (planes[j] << jnp.uint32(8 * j))
+    return pack_words(_unzigzag(z, width), width)[:n_words]
+
+
 def unpack_flags(words: jnp.ndarray, n: int) -> jnp.ndarray:
     return unpack_words(words, n, 1, signed=False).astype(bool)
 
@@ -246,9 +324,12 @@ class EncodedPacked(NamedTuple):
         return bits + 64                     # n_outliers/overflow + eb header
 
 
-def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> EncodedPacked:
+def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None, *,
+                  return_quantized: bool = False) -> EncodedPacked:
     """Quantize + bit-pack in one jit-safe call (reference path; the fused
-    Pallas pipeline in kernels/pack.py is its bit-exact device twin)."""
+    Pallas pipeline in kernels/pack.py is its bit-exact device twin).
+    With return_quantized, also returns the local Quantized (outlier/recon
+    planes stay on-device for residual bookkeeping, never on the wire)."""
     flat = x.reshape(-1)
     n = flat.shape[0]
     k = cfg.outlier_cap(n)
@@ -264,10 +345,11 @@ def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None) -> EncodedPacke
     payload = jnp.where(idx < n, float_to_bits(flat)[safe_idx], 0)
     words = pack_words(qt.bins, cfg.bin_bits)
     sign_words = None if qt.sign is None else pack_flags(qt.sign)
-    return EncodedPacked(words, idx.astype(jnp.int32),
-                         payload.astype(jnp.uint32), n_out, n_out > k,
-                         sign_words,
-                         None if eb is None else jnp.asarray(eb, flat.dtype))
+    enc = EncodedPacked(words, idx.astype(jnp.int32),
+                        payload.astype(jnp.uint32), n_out, n_out > k,
+                        sign_words,
+                        None if eb is None else jnp.asarray(eb, flat.dtype))
+    return (enc, qt) if return_quantized else enc
 
 
 def decode_packed(enc: EncodedPacked, cfg: QuantizerConfig, n: int | None = None,

@@ -134,15 +134,36 @@ def deserialize(stream: bytes) -> tuple[np.ndarray, QuantizerConfig]:
     return out, cfg
 
 
+def _device_pipeline(cfg: QuantizerConfig, pipeline):
+    """Resolve the device-wire pipeline: an explicit spec/Pipeline wins;
+    otherwise cfg maps onto its historical default chain,
+    quantize|pack|narrow (DESIGN.md §6/§7)."""
+    from .pipeline import (ChunkStage, PackStage, Pipeline, QuantStage,
+                           parse_pipeline)
+    if pipeline is not None:
+        return parse_pipeline(pipeline)
+    return Pipeline(QuantStage(cfg.mode, cfg.error_bound,
+                               cfg.outlier_cap_frac, cfg.dtype),
+                    PackStage(cfg.bin_bits), (ChunkStage("narrow"),))
+
+
 def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
-                      stream: bytes | None = None, wire: str = "host"):
+                      stream: bytes | None = None, wire: str = "host",
+                      pipeline=None, per_stage: bool = False):
     """Compression ratio of x under cfg.
 
     wire='host'   — this module's zlib byte stream (archival coder).
-    wire='device' — the jit wire format: EncodedPacked + the chunked
-                    lossless stage (core.codec.encode_lossless), counting
-                    the transmitted bits only (DESIGN.md §6).
+    wire='device' — the jit wire format: the compression PIPELINE's
+                    `Encoded` container (DESIGN.md §7), counting the
+                    transmitted bits only via `Pipeline.wire_bits` — the
+                    SAME accessor the gathered wire is measured with, so
+                    reported and shipped bytes cannot drift.  `pipeline`
+                    (spec string or Pipeline) selects the chain; default
+                    is cfg's quantizer + pack + 'narrow' (the §6 stage).
     wire='both'   — (host, device) tuple, for comparable benchmark rows.
+    per_stage     — with a device wire, report [(stage_spec, ratio)] per
+                    chain prefix instead of one number (Pipeline
+                    .stage_report), so any chain's ratio decomposes.
     """
     if wire not in ("host", "device", "both"):
         raise ValueError(f"wire must be host|device|both, got {wire!r}")
@@ -152,11 +173,16 @@ def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
             stream = serialize(x, cfg, level)
         host = x.nbytes / len(stream)
     if wire in ("device", "both"):
-        from . import codec as _codec                # lazy: jax import
-        import jax.numpy as jnp
-        enc = _codec.encode_lossless(
-            _codec.encode_packed(jnp.asarray(x), cfg))
-        device = x.nbytes / (float(enc.wire_bits()) / 8)
+        import jax.numpy as jnp                      # lazy: jax import
+        pipe = _device_pipeline(cfg, pipeline)
+        xj = jnp.asarray(x)
+        if per_stage:
+            rows = pipe.stage_report(xj)
+            device = [(label, x.nbytes * 8 / float(bits))
+                      for label, bits in rows[1:]]
+        else:
+            enc = pipe.encode(xj)
+            device = x.nbytes / (float(pipe.wire_bits(enc, x.size)) / 8)
     if wire == "host":
         return host
     if wire == "device":

@@ -46,5 +46,33 @@ def test_readme_links_resolve():
 def test_readme_covers_the_essentials():
     text = (REPO / "README.md").read_text()
     for needle in ("DESIGN.md", "examples/quickstart.py", "pytest",
-                   "PYTHONPATH=src"):
+                   "PYTHONPATH=src", "parse_pipeline"):
         assert needle in text, f"README.md is missing {needle!r}"
+
+
+def test_design_documents_the_pipeline_api():
+    """§7 is the pipeline contract: every registered stage name must
+    appear in DESIGN.md (the registry row is part of adding a stage), and
+    the spec grammar example must be present."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.pipeline import STAGES
+
+    _, text = _design_sections()
+    assert "## §7" in text
+    sec7 = text.split("## §7", 1)[1]
+    for name in STAGES:
+        assert f"`{name}`" in sec7 or f"`{name}[" in sec7, (
+            f"registered stage {name!r} is undocumented in DESIGN.md §7")
+    assert "rel:1e-3|pack:8|zero|narrow" in sec7
+
+
+def test_registry_pipeline_presets_parse():
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs.registry import PIPELINES, get_pipeline
+    from repro.core.pipeline import parse_pipeline
+
+    for name, spec in PIPELINES.items():
+        pipe = parse_pipeline(get_pipeline(name))
+        assert parse_pipeline(pipe.spec()) == pipe, name
