@@ -4,9 +4,13 @@ The container is offline, so each generator mimics the statistical
 character of its suite (smoothness, dynamic range, noise floor) — enough
 for compression-ratio and rounding-outlier behavior to be representative.
 Sizes are scaled down (~4M values) to fit the CPU time budget; every
-generator is deterministic.
+generator is deterministic ACROSS PROCESSES: seeds derive from
+zlib.crc32 of the suite name, not the salted built-in hash(), so
+compression ratios reproduce without pinning PYTHONHASHSEED.
 """
 from __future__ import annotations
+
+import zlib
 
 import numpy as np
 
@@ -14,7 +18,7 @@ N = 1 << 22     # ~4M floats per suite (~16 MiB)
 
 
 def _rng(name):
-    return np.random.default_rng(abs(hash(name)) % (1 << 32))
+    return np.random.default_rng(zlib.crc32(name.encode()))
 
 
 def cesm():     # climate: smooth 2-D fields, strong spatial correlation

@@ -15,14 +15,17 @@ beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
   lossless device-side lossless stage: end-to-end ratio vs packed/f32 on
            gradient-shaped + scientific data, KV pages, Pallas parity,
            and the shuffle stage on mixed-sign REL bins
+  transfer prefill->decode KV transfer (DESIGN.md §8): PackedCache wire
+           bytes per stage chain vs raw pages, pack/unpack throughput,
+           and simulated link occupancy under load
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...]
            [--pipeline SPEC|PRESET] [--smoke]
 
 --pipeline benches an arbitrary pipeline chain (DESIGN.md §7 spec string
 like "rel:1e-3|pack:8|zero|narrow", or a configs.registry preset name)
-in the `lossless` table; --smoke shrinks the lossless table's
-datasets/repeats for CI.
+in the `lossless` table; --smoke shrinks the lossless and transfer
+tables' datasets/repeats for CI.
 """
 from __future__ import annotations
 
@@ -461,11 +464,65 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
           "bit-identical" if same else "MISMATCH")
 
 
+def transfer(smoke: bool = False):
+    """Prefill->decode KV transfer over the Transport layer (DESIGN.md
+    §8): measured `PackedCache` wire bytes per stage chain — via the same
+    `Transport.bytes_moved` accessor `models/serve.py` ships with — vs
+    moving raw f32 pages, pack+unpack roundtrip time, and simulated
+    transfer time / sustainable migration rate on a 100 Gb/s link.
+
+    Two load points: a cache mid-decode (60% written — zero chunks drop
+    the unwritten tail) and a fully written one (the stage floor).
+    """
+    from repro.compression.kv import kv_quantizer_config, quantize_kv
+    from repro.core.transport import TRANSPORT
+    from repro.models.serve import QuantCache, pack_cache, unpack_cache
+
+    link_gbps = 100.0                       # simulated disaggregation link
+    link_bps = link_gbps * 1e9 / 8
+    # [L, B, G, S, hd] serving-cache shape (reduced-model scale on CPU)
+    l_, b, g_, s, hd = (2, 2, 2, 512, 64) if smoke else (4, 4, 4, 2048, 64)
+    reps = 1 if smoke else 3
+    r = np.random.default_rng(17)
+    kv_cfg = kv_quantizer_config()
+
+    for load, written in (("midstream", 0.6), ("full", 1.0)):
+        x = r.standard_normal((l_, b, g_, s, hd)).astype(np.float32)
+        x[:, :, :, int(s * written):, :] = 0.0       # unwritten tail pages
+        qk = quantize_kv(jnp.asarray(x), kv_cfg)
+        qv = quantize_kv(jnp.asarray(x[..., ::-1]), kv_cfg)
+        hot = jnp.zeros((l_, b, 128, g_, hd), jnp.float32)
+        cache = QuantCache(qk, qv, hot, hot)
+        raw_pages = 2 * qk.bins.size * 4 + 2 * hot.size * hot.dtype.itemsize
+
+        for stages in ("", "zero", "narrow", "shuffle|narrow"):
+            f_pack = jax.jit(lambda c, st=stages: pack_cache(c, stages=st))
+            f_rt = jax.jit(
+                lambda c, st=stages: unpack_cache(pack_cache(c, stages=st)))
+            wire = f_pack(cache)
+            t = _time(f_rt, cache, repeats=reps)
+            moved = float(TRANSPORT.bytes_moved(wire, op="send_pages"))
+            ms = moved / link_bps * 1e3
+            label = stages if stages else "packed"
+            _emit(f"transfer.{load}.{label}", t * 1e6,
+                  f"wire={moved/2**20:.2f}MiB vs_raw_f32="
+                  f"{raw_pages/moved:.2f}x link{link_gbps:g}Gbps="
+                  f"{ms:.2f}ms sustainable={link_bps/moved:.1f}migr/s "
+                  f"roundtrip={t*1e6:.0f}us")
+
+    # transfer is exact: the unpacked cache must be bit-identical
+    back = unpack_cache(pack_cache(cache, stages="shuffle|narrow"))
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(cache),
+                               jax.tree.leaves(back)))
+    _emit("transfer.roundtrip", 0.0, "bit-identical" if same else "MISMATCH")
+
+
 TABLES = {
     "table3": table3, "table4": table4, "table56": table56,
     "table7": table7, "table8": table8, "table9": table9,
     "ckpt": ckpt, "kv": kv, "gradwire": gradwire, "packedwire": packedwire,
-    "lossless": lossless,
+    "lossless": lossless, "transfer": transfer,
 }
 
 
@@ -503,6 +560,8 @@ def main(argv=None) -> None:
     for n in names:
         if n == "lossless":
             TABLES[n](pipeline=pipeline, smoke=args.smoke)
+        elif n == "transfer":
+            TABLES[n](smoke=args.smoke)
         else:
             TABLES[n]()
 

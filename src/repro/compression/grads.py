@@ -1,27 +1,30 @@
 """Guaranteed-error-bounded gradient compression for the cross-pod
 all-reduce — the paper's quantizer on the slowest wire in the system.
 
-Design (DESIGN.md §2/§4/§5/§7):
+Design (DESIGN.md §2/§4/§5/§7/§8):
   * Within a pod, gradients reduce over the fast 'data'/'model' axes in
     full precision (GSPMD handles those — the links are wide).
   * Across pods, each pod quantizes its pod-local gradient through a
     compression PIPELINE (core.pipeline, DESIGN.md §7) — an ABS quantizer
     with a per-tensor NOA-style bound eb = eb_rel * rms(g), the §4
-    bit-pack, and any chain of lossless word stages — and all-gathers ONE
-    `Encoded` wire container.  Peers run the pipeline's exact inverse and
-    average.  Nothing wider than the final payload plane crosses the
-    collective — `CompressedShard.nbytes()` is the real measured
-    footprint (`benchmarks/run.py gradwire`/`lossless`).
+    bit-pack, and any chain of lossless word stages — into ONE `Encoded`
+    wire container.  The TRANSPORT layer (core.transport, DESIGN.md §8)
+    moves it: `Transport.reduce_sum` ring-reduces in the packed domain
+    when every pod sits on the same pow2 grid with no outliers, and
+    otherwise gathers the wires and sums the per-pod decodes —
+    bit-identical either way.  Nothing wider than the final payload
+    plane crosses the collective — `CompressedShard.nbytes()` is the
+    real measured footprint (`benchmarks/run.py gradwire`/`lossless`),
+    routed through the one `transport.wire_bytes` accessor.
   * LOSSLESS STAGES (DESIGN.md §6/§7): with word stages in the pipeline
     (e.g. "abs:1|pack:8|narrow" — a spec silent about cap= inherits this
     config's outlier_cap_frac; an explicit cap= wins), the packed words
-    are further coded
-    before the gather — all-zero chunks dropped, the rest narrowed,
-    exactly reversible, so the bound is untouched.  XLA's static shapes
-    force the gathered payload to be padded to capacity; the honest
-    footprint is the transmitted prefix (`payload_len`), which is what
-    `nbytes()` measures and what a real transport (or a size-psum'd
-    ragged gather) would move.
+    are further coded before the gather — all-zero chunks dropped, the
+    rest narrowed, exactly reversible, so the bound is untouched.  XLA's
+    static shapes force the gathered payload to be padded to capacity;
+    the honest footprint is the transmitted prefix (`payload_len`),
+    which is what `nbytes()` measures and what a real transport (or a
+    size-psum'd ragged gather) would move.
   * ERROR FEEDBACK: the residual g - shipped is carried to the next step,
     so the long-run update is unbiased.  The paper's guarantee bounds the
     per-step residual ELEMENTWISE: |e_i| <= eb (outliers ship exactly, so
@@ -35,26 +38,18 @@ Design (DESIGN.md §2/§4/§5/§7):
 These functions use explicit collectives over the 'pod' axis and are
 called INSIDE a shard_map set up by launch/train.py; 'data'/'model'
 sharding stays with GSPMD.
-
-The pre-pipeline forked surfaces (`compress_shard_lc`,
-`CompressedShardLC`, `lossless_stage=`) remain as thin deprecation shims
-for one PR — they emit DeprecationWarning and route through the pipeline,
-bit-identically.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import codec
-from repro.core.bitops import bits_to_float
 from repro.core.pipeline import (Encoded, Pipeline, PackStage, QuantStage,
-                                 ChunkStage, parse_pipeline)
-from repro.core.quantizer import dequantize_abs
+                                 parse_pipeline)
+from repro.core.transport import TRANSPORT, Transport, wire_bytes as _wire_bytes
 
 
 class GradCompressionConfig(NamedTuple):
@@ -62,8 +57,7 @@ class GradCompressionConfig(NamedTuple):
     bin_bits: int = 8               # used when `pipeline` is empty
     outlier_cap_frac: float = 1 / 64
     enabled: bool = True
-    lossless_stage: str = "none"    # DEPRECATED — set `pipeline` instead
-    pipeline: str = ""              # spec, e.g. "abs:1|pack:8|narrow";
+    pipeline: str = ""              # spec, e.g. "abs:1.0|pack:8|narrow";
     #                                 the quantizer eb is a placeholder
     #                                 (the traced per-tensor eb overrides)
     #                                 and a spec without cap= inherits
@@ -71,11 +65,10 @@ class GradCompressionConfig(NamedTuple):
 
     def pipe(self) -> Pipeline:
         """The compression pipeline this config describes.  `pipeline`
-        wins; otherwise one is built from the legacy fields (bin_bits +
-        lossless_stage), which stay supported for one PR.  The quantizer
-        must be ABS: the wire's per-tensor bound eb_rel * rms(g) is an
-        ABS bound, and compressed_mean's gather/dequant moves exactly the
-        ABS planes (no sign plane)."""
+        wins; otherwise a stage-free chain is built from eb_rel/bin_bits.
+        The quantizer must be ABS: the wire's per-tensor bound
+        eb_rel * rms(g) is an ABS bound, and the transport's
+        gather/dequant moves exactly the ABS planes (no sign plane)."""
         if self.pipeline:
             pipe = parse_pipeline(self.pipeline)
             if pipe.quant.mode != "abs":
@@ -90,21 +83,8 @@ class GradCompressionConfig(NamedTuple):
                     pipe, quant=dataclasses.replace(
                         pipe.quant, cap=self.outlier_cap_frac))
             return pipe
-        if self.lossless_stage != "none":
-            if self.lossless_stage not in codec.LC_STAGES:
-                raise ValueError(
-                    f"lossless_stage must be 'none' or one of "
-                    f"{codec.LC_STAGES}, got {self.lossless_stage!r}")
-            warnings.warn(
-                "GradCompressionConfig.lossless_stage is deprecated; set "
-                f"pipeline='abs:1.0:cap={self.outlier_cap_frac!r}"
-                f"|pack:{self.bin_bits}|{self.lossless_stage}'",
-                DeprecationWarning, stacklevel=2)
-            stages = (ChunkStage(self.lossless_stage),)
-        else:
-            stages = ()
         return Pipeline(QuantStage("abs", 1.0, self.outlier_cap_frac),
-                        PackStage(self.bin_bits), stages)
+                        PackStage(self.bin_bits))
 
     def qcfg(self):
         return self.pipe().qcfg()
@@ -114,8 +94,8 @@ class GradCompressionConfig(NamedTuple):
 class CompressedShard:
     """One pod's wire payload — an `Encoded` container plus its (static)
     pipeline and element count.  The arrays inside `enc` are exactly what
-    the all-gather moves; the legacy field names (`words`,
-    `header_words`, `payload`, ...) remain as read-only views."""
+    the transport moves; the legacy field names (`words`, `header_words`,
+    `payload`, ...) remain as read-only views."""
 
     def __init__(self, enc: Encoded, pipe: Pipeline, n: int):
         self.enc = enc
@@ -143,8 +123,8 @@ class CompressedShard:
 
     @property
     def header_words(self):
-        """The first non-empty stage header plane (legacy
-        CompressedShardLC semantics: the chunk coder's width codes)."""
+        """The first non-empty stage header plane (the chunk coder's
+        width codes)."""
         for h in self.enc.headers:
             if h.size:
                 return h
@@ -179,8 +159,9 @@ class CompressedShard:
     def nbytes(self):
         """Measured per-pod transmitted footprint of one all-gather: a
         static int for static chains, traced (data-dependent) with a
-        length-variable lossless stage — see Pipeline.wire_bits."""
-        return self.pipe.wire_bytes(self.enc, self.n)
+        length-variable lossless stage.  Routed through the single
+        accounting accessor `core.transport.wire_bytes` (DESIGN.md §8)."""
+        return _wire_bytes(self)
 
     def capacity_nbytes(self) -> int:
         """Static upper bound — what the padded all-gather buffer holds."""
@@ -200,55 +181,27 @@ def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig):
     return CompressedShard(enc, pipe, flat.size), q
 
 
-def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
+def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str,
+                    *, transport: Transport | None = None):
     """Compressed mean of g over the `axis` collective (call inside
     shard_map).  Returns (mean, residual) — residual is THIS shard's
-    error-feedback term, elementwise bounded by eb."""
-    pipe = cfg.pipe()
-    qc = pipe.qcfg()
+    error-feedback term, elementwise bounded by eb.  All wire movement
+    goes through the Transport layer (DESIGN.md §8); `transport=`
+    overrides the default (e.g. Transport(reduce='gather') to pin the
+    reference path)."""
+    tp = TRANSPORT if transport is None else transport
     flat = g.reshape(-1).astype(jnp.float32)
-    n = flat.size
-    n_words = pipe.n_words(n)
     shard, q = compress_shard(g, cfg)
     # all pods must take the same branch: agree by pmax
     any_overflow = jax.lax.pmax(shard.enc.overflow.astype(jnp.int32),
                                 axis) > 0
     p = jax.lax.psum(1, axis)        # axis size (jax.lax.axis_size compat)
 
-    def dequant_one(w, e, ii, pp):
-        bins = codec.unpack_words(w, n, qc.bin_bits)
-        vals = dequantize_abs(bins, qc, eb=e, dtype=jnp.float32)
-        exact = bits_to_float(pp.astype(jnp.int32), jnp.float32)
-        # mode='drop' discards empty slots (ii == n).  NEVER clamp them
-        # to n-1: an outlier at the last index would be clobbered by
-        # the empties' duplicate writes and decode as 0 — a silent
-        # guarantee violation (the residual for outliers is 0, so
-        # error feedback would not recover it either).
-        return vals.at[ii].set(exact, mode="drop")
-
-    def compressed_path(_):
-        eb_all = jax.lax.all_gather(shard.enc.eb, axis)
-        idx_all = jax.lax.all_gather(shard.enc.out_idx, axis)
-        pay_all = jax.lax.all_gather(shard.enc.out_payload, axis)
-        if pipe.stages:
-            # the padded payload and per-stage header planes are gathered
-            # for shape-static XLA; the transmitted size is shard.nbytes()
-            hdrs_all = jax.tree.map(
-                lambda h: jax.lax.all_gather(h, axis), shard.enc.headers)
-            pw_all = jax.lax.all_gather(shard.enc.payload, axis)
-            words_all = jax.vmap(
-                lambda hs, pw: pipe.decode_words(hs, pw, n_words))(
-                    hdrs_all, pw_all)
-        else:
-            words_all = jax.lax.all_gather(shard.enc.payload, axis)
-
-        return jnp.sum(jax.vmap(dequant_one)(words_all, eb_all, idx_all,
-                                             pay_all), axis=0)
-
-    def lossless_path(_):
-        return jax.lax.psum(flat, axis)
-
-    summed = jax.lax.cond(any_overflow, lossless_path, compressed_path, None)
+    summed = jax.lax.cond(
+        any_overflow,
+        lambda _: jax.lax.psum(flat, axis),
+        lambda _: tp.reduce_sum(shard.enc, shard.pipe, flat.size, axis),
+        None)
     # residual: what we failed to ship (0 for outliers — they went exact;
     # 0 if the lossless path ran)
     shipped = jnp.where(q.outlier, flat, q.recon)
@@ -257,14 +210,16 @@ def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str):
 
 
 def compressed_mean_tree(grads, residuals, cfg: GradCompressionConfig,
-                         axis: str = "pod"):
+                         axis: str = "pod",
+                         transport: Transport | None = None):
     """Tree version with error feedback: grads_in + residuals are
     compressed-averaged; returns (mean_tree, new_residual_tree)."""
     leaves_g, tree = jax.tree.flatten(grads)
     leaves_r = jax.tree.leaves(residuals)
     out_g, out_r = [], []
     for g, r in zip(leaves_g, leaves_r):
-        m, nr = compressed_mean(g + r.astype(g.dtype), cfg, axis)
+        m, nr = compressed_mean(g + r.astype(g.dtype), cfg, axis,
+                                transport=transport)
         out_g.append(m.astype(g.dtype))
         out_r.append(nr)
     return jax.tree.unflatten(tree, out_g), jax.tree.unflatten(tree, out_r)
@@ -282,40 +237,3 @@ def wire_bytes(n_elems: int, cfg: GradCompressionConfig) -> int:
     n_words = pipe.n_words(n_elems)
     k = qc.outlier_cap(n_elems)
     return n_words * 4 + k * 8 + 8
-
-
-# ---------------------------------------------------------------------------
-# deprecation shims (one PR): the pre-pipeline forked *_lc surfaces
-# ---------------------------------------------------------------------------
-
-def compress_shard_lc(g: jnp.ndarray, cfg: GradCompressionConfig):
-    """DEPRECATED — set GradCompressionConfig.pipeline (or lossless_stage)
-    and call compress_shard; this shim routes there bit-identically."""
-    warnings.warn(
-        "compress_shard_lc is deprecated; use compress_shard with a "
-        "pipeline spec (GradCompressionConfig.pipeline)",
-        DeprecationWarning, stacklevel=2)
-    if cfg.lossless_stage not in codec.LC_STAGES and not cfg.pipeline:
-        raise ValueError(
-            f"compress_shard_lc needs lossless_stage in {codec.LC_STAGES}, "
-            f"got {cfg.lossless_stage!r} (use compress_shard for 'none')")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return compress_shard(g, cfg)
-
-
-def lc_wire_bytes(shard: CompressedShard):
-    """Measured transmitted footprint of one lossless-coded shard (traced
-    scalar — the payload length is data-dependent).  The gathered buffer
-    is padded to shard.capacity_nbytes(); a real transport moves this."""
-    return shard.nbytes()
-
-
-def __getattr__(name):
-    if name == "CompressedShardLC":
-        warnings.warn(
-            "CompressedShardLC is deprecated; compress_shard returns the "
-            "unified CompressedShard for any pipeline",
-            DeprecationWarning, stacklevel=2)
-        return CompressedShard
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

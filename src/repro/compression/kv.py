@@ -33,18 +33,19 @@ Two representations:
     run through any chain of pipeline word stages (DESIGN.md §7 —
     `pack_kv(q, stages="narrow")`, `stages="shuffle|narrow"`, ...) coded
     PER PAGE so pages stay independently migratable.  This is what cache
-    migration / prefill->decode disaggregation ships between hosts;
-    pack_kv/unpack_kv round-trip bit-exactly for every stage chain.
-    Zero chunks dominate padded / unwritten cache regions and narrow
-    chunks cut attention-sink-free pages; `nbytes()` is the static
-    stage-free footprint and `wire_nbytes()` the measured
-    (data-dependent) transmitted one.  The pre-pipeline `pack_kv_lc` /
-    `unpack_kv_lc` / `gather_kv_packed_lc` / `PackedKVLC` surfaces
-    remain as deprecation shims for one PR.
+    migration / prefill->decode disaggregation ships between hosts — via
+    the Transport layer (core.transport, DESIGN.md §8):
+    `gather_kv_packed` is `Transport.all_gather` on the wire and
+    `models/serve.py::transfer_cache` moves it point-to-point with
+    `Transport.send_pages`.  pack_kv/unpack_kv round-trip bit-exactly
+    for every stage chain.  Zero chunks dominate padded / unwritten
+    cache regions and narrow chunks cut attention-sink-free pages;
+    `nbytes()` is the static stage-free footprint and `wire_nbytes()`
+    the measured (data-dependent) transmitted one, routed through the
+    single accounting accessor `transport.wire_bytes`.
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple
 
 import jax
@@ -52,8 +53,9 @@ import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, codec
 from repro.core.bitops import pow2_floor
-from repro.core.pipeline import ChunkStage, parse_word_stages
+from repro.core.pipeline import parse_word_stages
 from repro.core.quantizer import quantize_abs
+from repro.core.transport import TRANSPORT, wire_bytes as _wire_bytes
 
 
 class QuantizedKV(NamedTuple):
@@ -172,8 +174,8 @@ class PackedKV:
 
     @property
     def header_words(self):
-        """The first non-empty stage header plane (legacy PackedKVLC
-        semantics: the chunk coder's width codes)."""
+        """The first non-empty stage header plane (the chunk coder's
+        width codes)."""
         for h in self.headers:
             if h.shape[-1]:
                 return h
@@ -193,22 +195,11 @@ class PackedKV:
 
     def wire_nbytes(self):
         """Measured transmitted footprint (traced when a stage is
-        length-variable; +4/page for the transmitted length itself).  Per
-        page each stage costs its header CONTENT words only — not the
-        tile-padded stored plane (zeros the receiver re-pads); f32
-        accumulation, see EncodedLC.wire_bits."""
-        cap = self.payload.shape[-1]
-        n_pages = self.payload_len.size
-        per_page = sum(st.header_content_bits(cap)
-                       for st in self.stages) // 8
-        if self.stages and self.stages[-1].transmits_len:
-            per_page += 4
-            pay = 4.0 * jnp.sum(self.payload_len.astype(jnp.float32))
-        else:
-            pay = 4 * self.payload.size
-        return (n_pages * per_page + pay + self.eb2.size * 4
-                + self.out_idx.size * 4 + self.out_val.size * 4
-                + self.overflow.size)
+        length-variable; +4/page for the transmitted length itself).
+        Routed through the single accounting accessor
+        `core.transport.wire_bytes` (DESIGN.md §8) so reported and
+        shipped bytes cannot drift."""
+        return _wire_bytes(self)
 
 
 def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
@@ -271,69 +262,12 @@ def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
 def gather_kv_packed(p: PackedKV, axis: str) -> PackedKV:
     """All-gather a packed cache over a mesh axis (prefill->decode
     disaggregation: every decode host receives every prefill shard's pages
-    in wire form).  Call inside shard_map; leading axis of every array
-    becomes the axis size.  With word stages the padded payload plane is
-    gathered for shape-static XLA; the honest transfer size is
-    wire_nbytes() (see the grads.py note on length transmission)."""
-    return jax.tree.map(lambda a: jax.lax.all_gather(a, axis), p)
-
-
-# ---------------------------------------------------------------------------
-# deprecation shims (one PR): the pre-pipeline forked *_lc surfaces
-# ---------------------------------------------------------------------------
-
-def _warn_lc(old: str, new: str):
-    warnings.warn(f"{old} is deprecated; use {new}", DeprecationWarning,
-                  stacklevel=3)
-
-
-def pack_kv_lc(q: QuantizedKV, *, page: int = 128,
-               stage: str = "narrow") -> PackedKV:
-    """DEPRECATED — pack_kv(q, stages=<chain>) covers any stage chain."""
-    _warn_lc("pack_kv_lc", f"pack_kv(q, stages={stage!r})")
-    return pack_kv(q, page=page, stages=stage)
-
-
-def unpack_kv_lc(p: PackedKV, *, page: int = 128) -> QuantizedKV:
-    """DEPRECATED — unpack_kv inverts every stage chain."""
-    _warn_lc("unpack_kv_lc", "unpack_kv")
-    return unpack_kv(p, page=page)
-
-
-def gather_kv_packed_lc(p: PackedKV, axis: str) -> PackedKV:
-    """DEPRECATED — gather_kv_packed gathers every wire form."""
-    _warn_lc("gather_kv_packed_lc", "gather_kv_packed")
-    return gather_kv_packed(p, axis)
-
-
-@jax.tree_util.register_pytree_node_class
-class _LegacyPackedKVLC(PackedKV):
-    """Construction shim: accepts the pre-pipeline PackedKVLC NamedTuple
-    field order (header_words first) and maps it onto the unified
-    PackedKV — a positional legacy construction must not silently
-    misassign planes.  The stage identity is irrelevant to decode (the
-    2-bit header codes are self-describing), so 'narrow' stands in.
-    Instances flatten back to plain PackedKV."""
-
-    def __init__(self, header_words, payload, payload_len, eb2, out_idx,
-                 out_val, overflow):
-        super().__init__(payload, payload_len, (header_words,), eb2,
-                         out_idx, out_val, overflow,
-                         stages=(ChunkStage("narrow"),))
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return PackedKV(*children, stages=aux[0])
-
-
-def __getattr__(name):
-    if name == "PackedKVLC":
-        warnings.warn(
-            "PackedKVLC is deprecated; pack_kv returns the unified "
-            "PackedKV for any stage chain", DeprecationWarning,
-            stacklevel=2)
-        return _LegacyPackedKVLC
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    in wire form) — `Transport.all_gather` on the one wire form.  Call
+    inside shard_map; leading axis of every array becomes the axis size.
+    With word stages the padded payload plane is gathered for
+    shape-static XLA; the honest transfer size is wire_nbytes() (see the
+    grads.py note on length transmission)."""
+    return TRANSPORT.all_gather(p, axis)
 
 
 def kv_wire_bytes(shape, *, page: int = 128, cap: int = 8) -> int:

@@ -5,6 +5,7 @@ Public API:
     QuantizerConfig             — mode ('abs'|'rel'|'noa'), error bound, widths
     Pipeline / parse_pipeline   — LC-style composable chain + spec strings (§7)
     Encoded                     — the one pipeline wire container (§7)
+    Transport / TRANSPORT       — the one compressed-wire mover (§8)
     quantize / Quantized        — bins + outlier flags + recon (jit-safe)
     encode_dense/decode_dense   — fixed-shape codec, outliers stored densely
     encode_compact/decode_compact — capped compact outliers (wire format)
@@ -31,6 +32,7 @@ from .quantizer import (Quantized, dequantize_abs, dequantize_rel, quantize,
                         quantize_abs, quantize_abs_unprotected, quantize_noa,
                         quantize_rel, quantize_rel_library)
 from .serializer import compression_ratio, deserialize, serialize
+from .transport import TRANSPORT, Transport
 
 __all__ = [
     "QuantizerConfig", "Quantized", "quantize", "quantize_abs", "quantize_rel",
@@ -44,6 +46,7 @@ __all__ = [
     "lc_chunk_count", "lc_header_words", "LC_CHUNK", "LC_STAGES",
     "shuffle_words", "unshuffle_words", "shuffle_word_count",
     "Pipeline", "parse_pipeline", "Encoded", "STAGES", "register_stage",
+    "Transport", "TRANSPORT",
     "serialize", "deserialize", "compression_ratio",
     "log2approx", "pow2approx", "float_to_bits", "bits_to_float",
 ]

@@ -1,0 +1,256 @@
+"""The Transport API (DESIGN.md §8) — ONE choke point for every
+compressed wire that crosses a mesh axis.
+
+The paper's guarantee is an end-to-end property: encode -> transmit ->
+decode must return every value within eb of its original or bit-for-bit
+identical.  Before this module the "transmit" leg was scattered — the
+gradient wire hand-rolled five `lax.all_gather` calls over `Encoded`
+fields, the KV migration wire did its own pytree-map gather, and serving
+moved raw f32 pages.  `Transport` centralizes all of it:
+
+    all_gather(wire, axis)           pytree-aware gather of any wire form
+                                     (Encoded, CompressedShard, PackedKV)
+    reduce_sum / reduce_mean(...)    the compressed-gradient collective:
+                                     a packed-domain ring (lax.ppermute)
+                                     when the shards are grid-compatible,
+                                     else gather+dequantize+reduce —
+                                     bit-identical either way (§8)
+    send_pages(wire, src, dst, axis) point-to-point wire movement
+                                     (prefill→decode KV disaggregation)
+    bytes_moved(wire, op=...)        transmitted-byte accounting for a
+                                     whole collective, derived from
+                                     `wire_bytes` below
+
+`wire_bytes(wire)` is the single transmitted-bytes accessor all three
+former accountings (`CompressedShard.nbytes`, `PackedKV.wire_nbytes`,
+the pre-pipeline `lc_wire_bytes`) now route through, so reported and
+shipped bytes cannot drift between layers.
+
+PACKED-DOMAIN REDUCE (the §8 compatibility rule).  `reduce_sum` may
+reduce in the packed domain — a ring over `lax.ppermute` whose hop
+payload is the §4 uint32 word plane, with bins accumulated as integers
+and dequantized ONCE at the end — exactly when the result is provably
+bit-identical to the gather+dequantize+reduce reference:
+
+  * static:  the chain is ABS with no word stages (linear dequant, no
+             data-dependent payload), the axis size p is statically
+             known, and p * maxbin < 2^24 (every partial sum of bins is
+             an exact f32 multiple of the pow2 step eb2);
+  * runtime (pmax/pmin-agreed so all pods branch together): every pod
+             quantized on the SAME grid (bit-equal per-tensor eb) and
+             no pod has outliers (the exact-payload scatter is empty).
+
+Under those conditions sum_i(bins_i) * eb2 and sum_i(bins_i * eb2) are
+the same exactly-representable real number in any summation order, so
+the branch cannot change a single bit — pinned by tests/test_transport.
+Everything else (REL/NOA, staged chains, mixed grids, outliers) takes
+the gather path, which IS the pre-transport reference code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import codec as C
+from .pipeline import Encoded, Pipeline
+from .quantizer import dequantize_abs
+
+
+def axis_size_static(axis) -> int | None:
+    """Static size of a named mesh axis (needed to build a ring perm), or
+    None when this JAX cannot resolve it — callers fall back to gather."""
+    try:
+        size = jax.lax.axis_size(axis)                 # newer JAX
+    except (AttributeError, NameError):
+        try:
+            from jax.core import axis_frame            # 0.4.x: returns int
+            size = axis_frame(axis)
+        except Exception:
+            return None
+    return int(size) if isinstance(size, int) else None
+
+
+# ------------------------------------------------------ byte accounting ---
+
+def _kv_wire_bytes(wire):
+    """Per-page accounting for a PackedKV-shaped wire (payload /
+    payload_len / stages / eb2 / outlier table / overflow).  Traced when a
+    stage is length-variable; +4/page for the transmitted length itself.
+    Per page each stage costs its header CONTENT words only — not the
+    tile-padded stored plane (zeros the receiver re-pads); f32
+    accumulation, see EncodedLC.wire_bits for the rationale."""
+    cap = wire.payload.shape[-1]
+    n_pages = wire.payload_len.size
+    per_page = sum(st.header_content_bits(cap) for st in wire.stages) // 8
+    if wire.stages and wire.stages[-1].transmits_len:
+        per_page += 4
+        pay = 4.0 * jnp.sum(wire.payload_len.astype(jnp.float32))
+    else:
+        pay = 4 * wire.payload.size
+    return (n_pages * per_page + pay + wire.eb2.size * 4
+            + wire.out_idx.size * 4 + wire.out_val.size * 4
+            + wire.overflow.size)
+
+
+def wire_bytes(wire, *, pipe: Pipeline | None = None, n: int | None = None):
+    """Transmitted bytes of ONE wire object — the single accounting
+    accessor (DESIGN.md §8).  Dispatches on the wire form:
+
+      * `Encoded` + its `pipe` (and element count `n`): the pipeline's
+        transmitted-prefix accounting (`Pipeline.wire_bytes`);
+      * a shard carrying its own pipe/n (`CompressedShard`): same, using
+        the carried statics;
+      * a PackedKV-shaped per-page wire: the per-page chunk accounting;
+      * a NamedTuple of wires (e.g. `models.serve.PackedCache`): the sum
+        of its fields;
+      * a raw array: moves at full width (`size * itemsize`).
+
+    Static int for static chains, traced scalar when a length-variable
+    stage makes the payload data-dependent."""
+    if isinstance(wire, Encoded):
+        if pipe is None:
+            raise TypeError("wire_bytes(Encoded) needs pipe= (and n=)")
+        return pipe.wire_bytes(wire, n)
+    if isinstance(getattr(wire, "enc", None), Encoded):
+        return wire.pipe.wire_bytes(wire.enc, wire.n if n is None else n)
+    if hasattr(wire, "eb2") and hasattr(wire, "payload"):
+        return _kv_wire_bytes(wire)
+    if hasattr(wire, "_fields"):
+        total = 0
+        for field in wire:
+            total = total + wire_bytes(field)
+        return total
+    if hasattr(wire, "dtype") and hasattr(wire, "size"):
+        return wire.size * wire.dtype.itemsize
+    raise TypeError(f"wire_bytes cannot account a {type(wire).__name__}")
+
+
+# ------------------------------------------------------------ transport ---
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Moves compressed wires across mesh axes.  Stateless and hashable;
+    `TRANSPORT` below is the default instance consumers share.
+
+    reduce: 'auto' takes the packed-domain ring whenever the §8
+    compatibility rule allows (runtime-agreed, bit-identical); 'gather'
+    pins the gather+dequantize+reduce reference path unconditionally.
+    """
+    reduce: str = "auto"               # 'auto' | 'gather'
+
+    def __post_init__(self):
+        if self.reduce not in ("auto", "gather"):
+            raise ValueError(f"reduce must be 'auto' or 'gather', "
+                             f"got {self.reduce!r}")
+
+    # --- collectives ------------------------------------------------------
+
+    def all_gather(self, wire, axis):
+        """All-gather any wire pytree over a mesh axis (call inside
+        shard_map); every array leaf grows a leading axis of the axis
+        size.  Static metadata (pipelines, stage chains) rides in the
+        pytree aux data untouched."""
+        return jax.tree.map(lambda a: jax.lax.all_gather(a, axis), wire)
+
+    def reduce_sum(self, enc: Encoded, pipe: Pipeline, n: int, axis):
+        """Sum of every pod's decoded tensor over `axis` (call inside
+        shard_map).  Ring-reduces in the packed domain when the §8
+        compatibility rule holds (checked statically + runtime-agreed via
+        pmax/pmin so all pods branch together); otherwise — and always
+        with reduce='gather' — gathers the wires and sums the per-pod
+        decodes, the pre-transport reference path.  Bit-identical either
+        way."""
+        qc = pipe.qcfg()
+        p = axis_size_static(axis)
+        ring_ok = (self.reduce == "auto" and qc.mode == "abs"
+                   and not pipe.stages and p is not None and p > 1
+                   and p * qc.maxbin < (1 << 24))
+        if not ring_ok:
+            return self._gather_sum(enc, pipe, n, axis)
+        # runtime agreement: same pow2 grid everywhere + no outliers
+        # anywhere (NaN eb compares unequal -> gather, like any mismatch)
+        compat = jax.lax.pmax(enc.n_outliers, axis) == 0
+        if enc.eb is not None:
+            eb_hi = jax.lax.pmax(enc.eb, axis)
+            eb_lo = -jax.lax.pmax(-enc.eb, axis)
+            compat = compat & (eb_hi == eb_lo)
+        return jax.lax.cond(
+            compat,
+            lambda _: self._ring_sum(enc, qc, n, axis, p),
+            lambda _: self._gather_sum(enc, pipe, n, axis),
+            None)
+
+    def reduce_mean(self, enc: Encoded, pipe: Pipeline, n: int, axis):
+        """reduce_sum / axis_size — the compressed-mean collective."""
+        p = jax.lax.psum(1, axis)          # axis size (old-JAX compatible)
+        return self.reduce_sum(enc, pipe, n, axis) / p
+
+    def send_pages(self, wire, src: int, dst: int, axis):
+        """Point-to-point: move a wire pytree from mesh rank `src` to
+        `dst` along `axis` (call inside shard_map).  Rank `dst` receives
+        `src`'s arrays bit-for-bit; every other rank receives zeros
+        (ppermute semantics) — callers select the destination shard.
+        This is the prefill→decode KV migration primitive: only the wire
+        arrays cross the link, never a dequantized plane."""
+        perm = [(src, dst)]
+        return jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis, perm), wire)
+
+    # --- reduce internals -------------------------------------------------
+
+    def _gather_sum(self, enc, pipe, n, axis):
+        # the reference path: gather every pod's wire, run the pipeline's
+        # exact inverse per pod, sum.  Ops and order match the
+        # pre-transport compressed_mean gather/dequant exactly (pinned by
+        # tests/test_transport.py), so the refactor cannot move a bit.
+        enc_all = self.all_gather(enc, axis)
+        dec = jax.vmap(lambda e: pipe.decode(e, n=n, kernels=False))(enc_all)
+        return jnp.sum(dec, axis=0)
+
+    def _ring_sum(self, enc, qc, n, axis, p: int):
+        # packed-domain ring: each hop moves the §4 word plane (bin_bits
+        # per value) to the next rank; bins accumulate as exact int32 and
+        # dequantize ONCE.  Valid only under the §8 compatibility rule —
+        # reduce_sum guards it; do not call directly without those checks.
+        perm = [(i, (i + 1) % p) for i in range(p)]
+        total = C.unpack_words(enc.payload, n, qc.bin_bits)
+        cur = enc.payload
+        for _ in range(p - 1):
+            cur = jax.lax.ppermute(cur, axis, perm)
+            total = total + C.unpack_words(cur, n, qc.bin_bits)
+        return dequantize_abs(total, qc, eb=enc.eb, dtype=jnp.float32)
+
+    # --- accounting -------------------------------------------------------
+
+    def bytes_moved(self, wire, *, op: str = "all_gather",
+                    axis_size: int = 1, pipe: Pipeline | None = None,
+                    n: int | None = None):
+        """Total bytes a collective moves across the axis, from the
+        single `wire_bytes` accessor:
+
+          op='send_pages'   one copy of the wire (src -> dst);
+          op='all_gather'   every member ships its wire to the other
+                            p - 1 members: p * (p - 1) * wire_bytes;
+          op='reduce_sum' / 'reduce_mean'
+                            the gather-path bound (== all_gather).  When
+                            the §8 ring fires it moves only the word
+                            plane per hop — strictly less; this reports
+                            the path that is always available.
+        """
+        w = wire_bytes(wire, pipe=pipe, n=n)
+        if op == "send_pages":
+            return w
+        if op in ("all_gather", "reduce_sum", "reduce_mean"):
+            if axis_size < 2:
+                # p*(p-1)*w would silently report 0 bytes for a
+                # degenerate axis — demand the real size instead
+                raise ValueError(
+                    f"bytes_moved(op={op!r}) needs axis_size >= 2, "
+                    f"got {axis_size}")
+            return axis_size * (axis_size - 1) * w
+        raise ValueError(f"unknown op {op!r}")
+
+
+TRANSPORT = Transport()

@@ -10,6 +10,17 @@ Quantized mode cache layout per layer (compression/kv.py):
 When the open page fills ((pos+1) % page == 0) it is quantized in-step via
 lax.cond.  The XLA decode path dequantizes history explicitly; on real TPU
 the fused Pallas kernel (kernels/kv_attention.py) streams int8 directly.
+
+PREFILL→DECODE DISAGGREGATION (DESIGN.md §8): a prefill host builds the
+QuantCache and hands it to a decode host.  KV pages cross that link ONLY
+as `PackedKV` wires moved by `Transport.send_pages` — never as raw f32/
+bf16 planes: `pack_cache` converts a QuantCache to the `PackedCache`
+wire (closed pages bit-packed per page, optionally chunk-coded; the open
+hot page rides raw because it is not quantized yet), `transfer_cache`
+moves it across a mesh axis, `unpack_cache` restores the decode layout
+bit-exactly.  The §1 guarantee survives the transfer verbatim because
+pack/unpack are exact inverses (tests/test_transport.py pins both the
+bit-exactness and the page error bound after transfer).
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import QuantizerConfig
+from repro.core.transport import TRANSPORT, Transport
 from repro.compression import kv as KVC
 from . import layers as L
 from . import mamba as M
@@ -65,6 +77,45 @@ def make_quant_cache(cfg: ArchConfig, batch, seq, n_layers=None):
 
     hot = jnp.zeros((l_, batch, PAGE, g, hd), DTYPE)
     return QuantCache(one(), one(), hot, hot)
+
+
+class PackedCache(NamedTuple):
+    """The prefill→decode transfer wire for a QuantCache: closed pages as
+    per-page `PackedKV` wires, the open hot page raw (it is not quantized
+    yet — at PAGE=128 it amortizes away at production context lengths).
+    `core.transport.wire_bytes` accounts it field by field."""
+    k: KVC.PackedKV
+    v: KVC.PackedKV
+    hot_k: jnp.ndarray
+    hot_v: jnp.ndarray
+
+
+def pack_cache(cache: QuantCache, *, stages=()) -> PackedCache:
+    """QuantCache -> transfer wire.  `stages` is a word-stage chain spec
+    ("zero", "narrow", "shuffle|narrow", ...) applied per page — zero
+    chunks drop the unwritten tail of a mid-decode cache."""
+    return PackedCache(KVC.pack_kv(cache.k, page=PAGE, stages=stages),
+                       KVC.pack_kv(cache.v, page=PAGE, stages=stages),
+                       cache.hot_k, cache.hot_v)
+
+
+def unpack_cache(wire: PackedCache) -> QuantCache:
+    """Exact inverse of pack_cache: restore the int8 decode layout."""
+    return QuantCache(KVC.unpack_kv(wire.k, page=PAGE),
+                      KVC.unpack_kv(wire.v, page=PAGE),
+                      wire.hot_k, wire.hot_v)
+
+
+def transfer_cache(cache: QuantCache, src: int, dst: int, axis: str, *,
+                   stages=(), transport: Transport | None = None):
+    """Move a serving cache from mesh rank `src` (prefill) to `dst`
+    (decode) along `axis` — call inside shard_map.  KV pages cross the
+    link only as PackedKV wires through `Transport.send_pages`
+    (DESIGN.md §8); rank `dst` returns the bit-identical QuantCache,
+    other ranks return zeros (ppermute semantics)."""
+    tp = TRANSPORT if transport is None else transport
+    return unpack_cache(tp.send_pages(pack_cache(cache, stages=stages),
+                                      src, dst, axis))
 
 
 def _project_token(cfg: ArchConfig, p, x, pos):

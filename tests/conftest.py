@@ -1,0 +1,23 @@
+"""Shared test helpers.
+
+`shard_map_compat` is the one copy of the JAX shard_map version shim the
+in-process collective tests share (the subprocess scripts in
+test_grad_compression.py / test_transport.py keep inline copies — they
+must be self-contained source strings).  The API has already shifted
+once (check_rep -> check_vma, axis_names added); keeping the guard in
+one place means the next shift is one edit.
+"""
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names=("pod",)):
+    """Version-compat shard_map: the public jax.shard_map
+    (axis_names/check_vma) when this JAX has it, else the
+    jax.experimental full-manual one (check_rep=False)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(axis_names), check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

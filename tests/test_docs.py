@@ -67,6 +67,34 @@ def test_design_documents_the_pipeline_api():
     assert "rel:1e-3|pack:8|zero|narrow" in sec7
 
 
+def test_design_documents_the_transport_api():
+    """§8 is the transport contract: every public Transport method must
+    appear in DESIGN.md §8 (plus the module-level wire_bytes accessor and
+    the packed-domain compatibility rule), and §4/§6/§7 must cross-link
+    to it — the transport is the transmit leg of the guarantee and must
+    not drift out of the wire-format docs."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.transport import Transport
+
+    _, text = _design_sections()
+    assert "## §8" in text
+    sec8 = text.split("## §8", 1)[1]
+    methods = [m for m in vars(Transport)
+               if not m.startswith("_") and callable(getattr(Transport, m))]
+    assert set(methods) >= {"all_gather", "reduce_sum", "reduce_mean",
+                            "send_pages", "bytes_moved"}
+    for name in methods:
+        assert f"`{name}" in sec8, (
+            f"Transport.{name} is undocumented in DESIGN.md §8")
+    assert "`wire_bytes" in sec8 or "wire_bytes(" in sec8
+    assert "compatibility rule" in sec8
+    # §4/§6/§7 each cross-link the transport section
+    for n in (4, 6, 7):
+        body = text.split(f"## §{n}", 1)[1].split(f"## §{n + 1}", 1)[0]
+        assert "§8" in body, f"DESIGN.md §{n} does not cross-link §8"
+
+
 def test_registry_pipeline_presets_parse():
     import sys
     sys.path.insert(0, str(REPO / "src"))

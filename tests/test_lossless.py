@@ -12,10 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.compression.grads import (GradCompressionConfig, compress_shard,
-                                     compress_shard_lc, lc_wire_bytes,
                                      wire_bytes)
-from repro.compression.kv import (kv_quantizer_config, pack_kv, pack_kv_lc,
-                                  quantize_kv, unpack_kv_lc)
+from repro.compression.kv import (kv_quantizer_config, pack_kv,
+                                  quantize_kv, unpack_kv)
 from repro.core import (LC_CHUNK, LC_STAGES, QuantizerConfig,
                         decode_lossless, decode_packed, decode_words_lc,
                         encode_lossless, encode_packed, encode_words_lc,
@@ -228,18 +227,23 @@ def test_fused_kernel_tiling_invariance():
 
 def test_grad_shard_lc_roundtrip_and_accounting():
     n = (1 << 18) + 349
-    cfg = GradCompressionConfig(bin_bits=16, lossless_stage="zero")
+    cfg = GradCompressionConfig(
+        bin_bits=16, pipeline="abs:1.0:cap=0.015625|pack:16|zero")
     g = np.zeros(n, np.float32)
     g[: n // 32] = RNG.standard_normal(n // 32) * 3e-3
-    shard_lc, _ = compress_shard_lc(jnp.asarray(g), cfg)
-    shard, _ = compress_shard(jnp.asarray(g), cfg)
-    n_words = packed_word_count(n, cfg.bin_bits)
+    shard_lc, _ = compress_shard(jnp.asarray(g), cfg)
+    # independent stage-free reference: the coded wire must decode back
+    # to exactly the §4 plane a stage-free pipeline ships
+    shard, _ = compress_shard(
+        jnp.asarray(g),
+        cfg._replace(pipeline="abs:1.0:cap=0.015625|pack:16"))
+    n_words = packed_word_count(n, 16)
     back = decode_words_lc(shard_lc.header_words, shard_lc.payload, n_words)
     np.testing.assert_array_equal(np.asarray(back), np.asarray(shard.words))
     # measured transmitted bytes: far under the packed wire for sparse g,
     # and bounded by capacity
-    assert float(lc_wire_bytes(shard_lc)) < 0.25 * wire_bytes(n, cfg)
-    assert float(lc_wire_bytes(shard_lc)) <= shard_lc.capacity_nbytes()
+    assert float(shard_lc.nbytes()) < 0.25 * wire_bytes(n, cfg)
+    assert float(shard_lc.nbytes()) <= shard_lc.capacity_nbytes()
 
 
 @pytest.mark.parametrize("stage", ["zero", "narrow"])
@@ -249,6 +253,7 @@ def test_compressed_mean_lossless_stage_transparent(stage):
     the same shard_map collective."""
     from jax.sharding import PartitionSpec as P
 
+    from conftest import shard_map_compat
     from repro.compression.grads import compressed_mean
 
     n = 8192
@@ -258,21 +263,15 @@ def test_compressed_mean_lossless_stage_transparent(stage):
     mesh = jax.make_mesh((1,), ("pod",))
 
     def run(cfg):
-        f = lambda x: compressed_mean(x, cfg, "pod")
-        if hasattr(jax, "shard_map"):
-            mapped = jax.shard_map(f, mesh=mesh, in_specs=P(),
-                                   out_specs=(P(), P()),
-                                   axis_names={"pod"}, check_vma=False)
-        else:
-            from jax.experimental.shard_map import shard_map
-            mapped = shard_map(f, mesh=mesh, in_specs=P(),
-                               out_specs=(P(), P()), check_rep=False)
+        mapped = shard_map_compat(lambda x: compressed_mean(x, cfg, "pod"),
+                                  mesh, P(), (P(), P()))
         return jax.jit(mapped)(jnp.asarray(g))
 
     base_cfg = GradCompressionConfig(eb_rel=2.0 ** -6, bin_bits=8,
                                      outlier_cap_frac=1 / 64)
     mean0, resid0 = run(base_cfg)
-    mean1, resid1 = run(base_cfg._replace(lossless_stage=stage))
+    mean1, resid1 = run(base_cfg._replace(
+        pipeline=f"abs:1.0:cap=0.015625|pack:8|{stage}"))
     np.testing.assert_array_equal(np.asarray(mean0).view(np.uint32),
                                   np.asarray(mean1).view(np.uint32))
     np.testing.assert_array_equal(np.asarray(resid0).view(np.uint32),
@@ -288,8 +287,8 @@ def test_kv_lc_roundtrip_bitexact(stage):
     x = RNG.standard_normal((2, 3, 256, 64)).astype(np.float32)
     x[:, :, 160:, :] = 0.0                         # unwritten tail pages
     q = quantize_kv(jnp.asarray(x), cfg)
-    lc = pack_kv_lc(q, stage=stage)
-    back = unpack_kv_lc(lc)
+    lc = pack_kv(q, stages=stage)
+    back = unpack_kv(lc)
     for a, b in zip(q, back):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # zero tail pages shrink the measured wire below the packed one

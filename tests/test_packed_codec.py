@@ -215,14 +215,9 @@ def test_compressed_mean_outlier_at_last_index():
     cfg = GradCompressionConfig(eb_rel=2.0 ** -6, bin_bits=8,
                                 outlier_cap_frac=1 / 64)   # cap 64 >> 1
     mesh = jax.make_mesh((1,), ("pod",))
-    f = lambda x: compressed_mean(x, cfg, "pod")
-    if hasattr(jax, "shard_map"):
-        mapped = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
-                               axis_names={"pod"}, check_vma=False)
-    else:
-        from jax.experimental.shard_map import shard_map
-        mapped = shard_map(f, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
-                           check_rep=False)
+    from conftest import shard_map_compat
+    mapped = shard_map_compat(lambda x: compressed_mean(x, cfg, "pod"),
+                              mesh, P(), (P(), P()))
     mean, resid = jax.jit(mapped)(jnp.asarray(g))
     mean = np.asarray(mean)
     assert mean[-1] == g[-1], (mean[-1], "outlier at last index not exact")

@@ -1,13 +1,11 @@
 """Pipeline API (DESIGN.md §7): spec parse/print roundtrip, pipeline-vs-
-legacy bit-identity on every chain the forked surfaces could express,
-fused-kernel vs jit-fallback dispatch parity, the shuffle stage, shard_map
-transparency of the unified CompressedShard, and the deprecation shims.
+legacy bit-identity on every chain the pre-pipeline surfaces could
+express, fused-kernel vs jit-fallback dispatch parity, the shuffle stage,
+and shard_map transparency of the unified CompressedShard.
 
 Everything wire-shaped here is a bit-equality test: the pipeline replaced
 the forked *_lc surfaces, so ANY discrepancy against them — one word, one
 header code, one accounted byte — is a regression, not a quality delta."""
-import warnings
-
 import numpy as np
 import pytest
 
@@ -15,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, codec
-from repro.core.pipeline import (ChunkStage, Encoded, PackStage, Pipeline,
+from repro.core.pipeline import (Encoded, PackStage, Pipeline,
                                  QuantStage, ShuffleStage, STAGES,
                                  parse_pipeline)
 
@@ -316,6 +314,7 @@ def test_compressed_mean_pipeline_transparent_under_shard_map(spec):
     shard_map-transparent."""
     from jax.sharding import PartitionSpec as P
 
+    from conftest import shard_map_compat
     from repro.compression.grads import GradCompressionConfig, compressed_mean
 
     n = 8192
@@ -325,15 +324,8 @@ def test_compressed_mean_pipeline_transparent_under_shard_map(spec):
     mesh = jax.make_mesh((1,), ("pod",))
 
     def run(cfg):
-        f = lambda x: compressed_mean(x, cfg, "pod")
-        if hasattr(jax, "shard_map"):
-            mapped = jax.shard_map(f, mesh=mesh, in_specs=P(),
-                                   out_specs=(P(), P()),
-                                   axis_names={"pod"}, check_vma=False)
-        else:
-            from jax.experimental.shard_map import shard_map
-            mapped = shard_map(f, mesh=mesh, in_specs=P(),
-                               out_specs=(P(), P()), check_rep=False)
+        mapped = shard_map_compat(lambda x: compressed_mean(x, cfg, "pod"),
+                                  mesh, P(), (P(), P()))
         return jax.jit(mapped)(jnp.asarray(g))
 
     base = GradCompressionConfig(eb_rel=2.0 ** -6, bin_bits=8,
@@ -364,57 +356,7 @@ def test_pack_kv_stage_chains_roundtrip():
         assert float(p.wire_nbytes()) < pk.nbytes(), stages
 
 
-# ------------------------------------------------------ deprecation shims --
-
-def test_compress_shard_lc_shim_warns_and_matches():
-    from repro.compression import grads
-    n = 1 << 15
-    g = jnp.asarray(_mix(n))
-    cfg = grads.GradCompressionConfig(bin_bits=16, lossless_stage="narrow")
-    with pytest.warns(DeprecationWarning, match="compress_shard_lc"):
-        old, _ = grads.compress_shard_lc(g, cfg)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        new, _ = grads.compress_shard(g, cfg)
-    np.testing.assert_array_equal(np.asarray(old.payload),
-                                  np.asarray(new.payload))
-    np.testing.assert_array_equal(np.asarray(old.header_words),
-                                  np.asarray(new.header_words))
-    assert float(old.nbytes()) == float(new.nbytes())
-    with pytest.warns(DeprecationWarning, match="CompressedShardLC"):
-        assert grads.CompressedShardLC is grads.CompressedShard
-
-
-def test_kv_lc_shims_warn_and_match():
-    from repro.compression import kv as kvmod
-    x = RNG.standard_normal((2, 256, 64)).astype(np.float32)
-    q = kvmod.quantize_kv(jnp.asarray(x), kvmod.kv_quantizer_config())
-    with pytest.warns(DeprecationWarning, match="pack_kv_lc"):
-        old = kvmod.pack_kv_lc(q, stage="zero")
-    new = kvmod.pack_kv(q, stages="zero")
-    np.testing.assert_array_equal(np.asarray(old.payload),
-                                  np.asarray(new.payload))
-    np.testing.assert_array_equal(np.asarray(old.header_words),
-                                  np.asarray(new.header_words))
-    assert float(old.wire_nbytes()) == float(new.wire_nbytes())
-    with pytest.warns(DeprecationWarning, match="unpack_kv_lc"):
-        back = kvmod.unpack_kv_lc(old)
-    for a, b in zip(q, back):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    with pytest.warns(DeprecationWarning, match="PackedKVLC"):
-        legacy_cls = kvmod.PackedKVLC
-    assert issubclass(legacy_cls, kvmod.PackedKV)
-    # positional construction in the OLD NamedTuple field order must map
-    # onto the unified planes, not silently misassign them
-    rebuilt = legacy_cls(old.header_words, old.payload, old.payload_len,
-                         old.eb2, old.out_idx, old.out_val, old.overflow)
-    np.testing.assert_array_equal(np.asarray(rebuilt.payload),
-                                  np.asarray(old.payload))
-    np.testing.assert_array_equal(np.asarray(rebuilt.header_words),
-                                  np.asarray(old.header_words))
-    for a, b in zip(q, kvmod.unpack_kv(rebuilt)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
+# -------------------------------------------------------- config guards ---
 
 def test_grad_config_rejects_non_abs_pipelines():
     """compressed_mean's gather/dequant is ABS-only (per-tensor rms
@@ -443,12 +385,12 @@ def test_header_words_view_semantics():
                                   np.asarray(shard.enc.headers[1]))
 
 
-def test_lossless_stage_config_field_warns():
+def test_grad_config_default_fields_build_stage_free_chain():
+    """The eb_rel/bin_bits/outlier_cap_frac fields (no spec) must build
+    the same stage-free pipeline the equivalent spec does."""
     from repro.compression.grads import GradCompressionConfig
-    with pytest.warns(DeprecationWarning, match="lossless_stage"):
-        pipe = GradCompressionConfig(lossless_stage="zero").pipe()
-    assert pipe.stages == (ChunkStage("zero"),)
-    # and builds the same pipeline the spec form does
+    pipe = GradCompressionConfig(bin_bits=8, outlier_cap_frac=1 / 64).pipe()
+    assert pipe.stages == ()
     spec_pipe = GradCompressionConfig(
-        pipeline="abs:1.0:cap=0.015625|pack:8|zero").pipe()
+        pipeline="abs:1.0:cap=0.015625|pack:8").pipe()
     assert pipe == spec_pipe
