@@ -12,9 +12,10 @@ beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
   kv       KV-cache compression footprint + error (beyond paper)
   gradwire cross-pod gradient wire bytes (beyond paper)
   packedwire packed vs unpacked wire + codec throughput (beyond paper)
-  lossless device-side lossless stage: end-to-end ratio vs packed/f32 on
-           gradient-shaped + scientific data, KV pages, Pallas parity,
-           and the shuffle stage on mixed-sign REL bins
+  lossless device-side lossless stages: end-to-end ratio vs packed/f32
+           on gradient-shaped + scientific data, KV pages, Pallas
+           parity, the shuffle stage on mixed-sign REL bins, and the
+           `ent` entropy stage over surviving chunk payloads
   transfer prefill->decode KV transfer (DESIGN.md §8): PackedCache wire
            bytes per stage chain vs raw pages, pack/unpack throughput,
            and simulated link occupancy under load
@@ -392,7 +393,7 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
     for name, gen in datasets.GRAD_SUITES.items():
         g = jnp.asarray(gen()[:cut])
         n = g.size
-        for stage in ("zero", "narrow"):
+        for stage in ("zero", "narrow", "narrow|ent"):
             cfg = GradCompressionConfig(
                 bin_bits=16,
                 pipeline=f"abs:1.0:cap=0.015625|pack:16|{stage}")
@@ -401,31 +402,35 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
             t = _time(f, g, repeats=reps)
             lc_b = float(shard.nbytes())
             pk_b = wire_bytes(n, cfg)
-            _emit(f"lossless.{name}.{stage}", t * 1e6,
+            _emit(f"lossless.{name}.{stage.replace('|', '+')}", t * 1e6,
                   f"vs_packed={pk_b / lc_b:.2f}x vs_f32={n * 4 / lc_b:.2f}x "
                   f"(packed_only {n * 4 / pk_b:.2f}x) "
                   f"enc={n * 4 / t / 1e9:.2f}GB/s")
 
     for name, eb, bb in (("NYX", 64.0, 32), ("CESM", 1e-3, 32)):
         x = jnp.asarray(datasets.SUITES[name]()[:cut])
-        pipe = parse_pipeline(f"abs:{eb!r}:cap=0.015625|pack:{bb}|narrow")
-        f = jax.jit(lambda v: pipe.encode(v))
-        lc = f(x)
-        t = _time(f, x, repeats=reps)
         pk_pipe = parse_pipeline(f"abs:{eb!r}:cap=0.015625|pack:{bb}")
         pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x, kernels=False), x.size)
-        lc_bits = float(pipe.wire_bits(lc, x.size))
-        _emit(f"lossless.{name}.narrow", t * 1e6,
-              f"vs_packed={pk_bits / lc_bits:.2f}x "
-              f"vs_f32={x.size * 32 / lc_bits:.2f}x "
-              f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
+        for chain in ("narrow", "narrow|ent"):
+            pipe = parse_pipeline(
+                f"abs:{eb!r}:cap=0.015625|pack:{bb}|{chain}")
+            f = jax.jit(lambda v, p=pipe: p.encode(v))
+            lc = f(x)
+            t = _time(f, x, repeats=reps)
+            lc_bits = float(pipe.wire_bits(lc, x.size))
+            _emit(f"lossless.{name}.{chain.replace('|', '+')}", t * 1e6,
+                  f"vs_packed={pk_bits / lc_bits:.2f}x "
+                  f"vs_f32={x.size * 32 / lc_bits:.2f}x "
+                  f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
 
-    # mixed-sign REL bins: the shuffle stage's reason to exist (§7)
+    # mixed-sign REL bins: the shuffle stage's reason to exist (§7), and
+    # the entropy stage stacked on top of it
     x = jnp.asarray(datasets.rel_mixed()[:cut])
     pk_pipe = parse_pipeline("rel:0.001|pack:32")
     pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x, kernels=False), x.size)
     for chain, label in (("narrow", "narrow"),
-                         ("shuffle|narrow", "shuffle+narrow")):
+                         ("shuffle|narrow", "shuffle+narrow"),
+                         ("shuffle|narrow|ent", "shuffle+narrow+ent")):
         pipe = parse_pipeline(f"rel:0.001|pack:32|{chain}")
         f = jax.jit(lambda v, p=pipe: p.encode(v))
         enc = f(x)
@@ -436,16 +441,18 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
               f"vs_f32={x.size * 32 / bits:.2f}x "
               f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
 
-    # KV: tail pages unwritten (zeros) — the migration wire drops them
+    # KV: tail pages unwritten (zeros) — the migration wire drops them,
+    # and `ent` squeezes the written pages below narrow's byte floor
     r = np.random.default_rng(7)
     cache = r.standard_normal((2, 4, 1024, 64)).astype(np.float32)
     cache[:, :, 600:, :] = 0.0
     q = quantize_kv(jnp.asarray(cache), kv_quantizer_config())
     pk = pack_kv(q)
-    lc = pack_kv(q, stages="zero")
-    _emit("lossless.kv.zero", 0.0,
-          f"vs_packed={pk.nbytes() / float(lc.wire_nbytes()):.2f}x "
-          f"vs_f32={cache.nbytes / float(lc.wire_nbytes()):.2f}x")
+    for stages in ("zero", "narrow|ent"):
+        lc = pack_kv(q, stages=stages)
+        _emit(f"lossless.kv.{stages.replace('|', '+')}", 0.0,
+              f"vs_packed={pk.nbytes() / float(lc.wire_nbytes()):.2f}x "
+              f"vs_f32={cache.nbytes / float(lc.wire_nbytes()):.2f}x")
 
     # Pallas fused dispatch vs jit reference: bit-identical in interpret
     x = jnp.asarray(datasets.GRAD_SUITES["gradsmooth"]()[:1 << 19])
@@ -495,7 +502,8 @@ def transfer(smoke: bool = False):
         cache = QuantCache(qk, qv, hot, hot)
         raw_pages = 2 * qk.bins.size * 4 + 2 * hot.size * hot.dtype.itemsize
 
-        for stages in ("", "zero", "narrow", "shuffle|narrow"):
+        for stages in ("", "zero", "narrow", "shuffle|narrow",
+                       "narrow|ent"):
             f_pack = jax.jit(lambda c, st=stages: pack_cache(c, stages=st))
             f_rt = jax.jit(
                 lambda c, st=stages: unpack_cache(pack_cache(c, stages=st)))
@@ -503,7 +511,7 @@ def transfer(smoke: bool = False):
             t = _time(f_rt, cache, repeats=reps)
             moved = float(TRANSPORT.bytes_moved(wire, op="send_pages"))
             ms = moved / link_bps * 1e3
-            label = stages if stages else "packed"
+            label = stages.replace("|", "+") if stages else "packed"
             _emit(f"transfer.{load}.{label}", t * 1e6,
                   f"wire={moved/2**20:.2f}MiB vs_raw_f32="
                   f"{raw_pages/moved:.2f}x link{link_gbps:g}Gbps="

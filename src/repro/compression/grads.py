@@ -17,10 +17,12 @@ Design (DESIGN.md §2/§4/§5/§7/§8):
     real measured footprint (`benchmarks/run.py gradwire`/`lossless`),
     routed through the one `transport.wire_bytes` accessor.
   * LOSSLESS STAGES (DESIGN.md §6/§7): with word stages in the pipeline
-    (e.g. "abs:1|pack:8|narrow" — a spec silent about cap= inherits this
-    config's outlier_cap_frac; an explicit cap= wins), the packed words
-    are further coded before the gather — all-zero chunks dropped, the
-    rest narrowed, exactly reversible, so the bound is untouched.  XLA's
+    (e.g. "abs:1|pack:8|narrow", or "abs:1|pack:16|narrow|ent" to
+    entropy-code the surviving chunk bytes — a spec silent about cap=
+    inherits this config's outlier_cap_frac; an explicit cap= wins),
+    the packed words are further coded before the gather — all-zero
+    chunks dropped, the rest narrowed/entropy-coded, exactly
+    reversible, so the bound is untouched.  XLA's
     static shapes force the gathered payload to be padded to capacity;
     the honest footprint is the transmitted prefix (`payload_len`),
     which is what `nbytes()` measures and what a real transport (or a

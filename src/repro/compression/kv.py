@@ -31,8 +31,10 @@ Two representations:
   * PackedKV — the ONE wire layout (DESIGN.md §4/§7): per-page bins
     bit-packed into uint32 lanes via core.codec.pack_words, optionally
     run through any chain of pipeline word stages (DESIGN.md §7 —
-    `pack_kv(q, stages="narrow")`, `stages="shuffle|narrow"`, ...) coded
-    PER PAGE so pages stay independently migratable.  This is what cache
+    `pack_kv(q, stages="narrow")`, `stages="shuffle|narrow"`,
+    `stages="narrow|ent"`, ...) coded PER PAGE so pages stay
+    independently migratable (each page carries its own stage headers,
+    including `ent`'s per-page codebook).  This is what cache
     migration / prefill->decode disaggregation ships between hosts — via
     the Transport layer (core.transport, DESIGN.md §8):
     `gather_kv_packed` is `Transport.all_gather` on the wire and

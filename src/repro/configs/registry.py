@@ -98,10 +98,14 @@ PIPELINES = {
     "grad-wire-8-narrow": "abs:1.0:cap=0.015625|pack:8|narrow",
     "grad-wire-16-zero": "abs:1.0:cap=0.015625|pack:16|zero",
     "grad-wire-16-narrow": "abs:1.0:cap=0.015625|pack:16|narrow",
+    # entropy-coded gradient wire (§7 `ent`: canonical codebook over the
+    # bytes of the chunks that survive narrow)
+    "grad-wire-16-ent": "abs:1.0:cap=0.015625|pack:16|narrow|ent",
     # scientific-data archival-grade device chains (paper eval bound 1e-3)
     "sci-abs-narrow": "abs:0.001|pack:32|narrow",
     "sci-rel-narrow": "rel:0.001|pack:32|narrow",
     "sci-rel-shuffle": "rel:0.001|pack:32|shuffle|narrow",
+    "sci-rel-ent": "rel:0.001|pack:32|shuffle|narrow|ent",
     # the full chain exercised by CI's smoke step
     "smoke-chain": "rel:0.001|pack:8|zero|narrow",
 }

@@ -16,15 +16,16 @@ Public API:
     log2approx/pow2approx       — parity-safe transcendental replacements
 """
 from .bitops import bits_to_float, float_to_bits, log2approx, pow2approx
-from .codec import (LC_CHUNK, LC_STAGES, EncodedCompact, EncodedDense,
-                    EncodedLC, EncodedPacked, decode_compact, decode_dense,
-                    decode_lossless, decode_packed, decode_words_lc,
+from .codec import (ENT_MAX_LEN, ENT_SYMS, LC_CHUNK, LC_STAGES,
+                    EncodedCompact, EncodedDense, EncodedLC, EncodedPacked,
+                    decode_compact, decode_dense, decode_lossless,
+                    decode_packed, decode_words_ent, decode_words_lc,
                     encode_compact, encode_dense, encode_lossless,
-                    encode_packed, encode_words_lc, lc_chunk_count,
-                    lc_header_words, pack_flags, pack_words,
-                    packed_word_count, roundtrip_dense, shuffle_word_count,
-                    shuffle_words, unpack_flags, unpack_words,
-                    unshuffle_words)
+                    encode_packed, encode_words_ent, encode_words_lc,
+                    ent_header_words, lc_chunk_count, lc_header_words,
+                    pack_flags, pack_words, packed_word_count,
+                    roundtrip_dense, shuffle_word_count, shuffle_words,
+                    unpack_flags, unpack_words, unshuffle_words)
 from .config import QuantizerConfig
 from .pipeline import (STAGES, Encoded, Pipeline, parse_pipeline,
                        register_stage)
@@ -44,6 +45,8 @@ __all__ = [
     "EncodedCompact", "EncodedPacked", "EncodedLC", "encode_lossless",
     "decode_lossless", "encode_words_lc", "decode_words_lc",
     "lc_chunk_count", "lc_header_words", "LC_CHUNK", "LC_STAGES",
+    "encode_words_ent", "decode_words_ent", "ent_header_words",
+    "ENT_MAX_LEN", "ENT_SYMS",
     "shuffle_words", "unshuffle_words", "shuffle_word_count",
     "Pipeline", "parse_pipeline", "Encoded", "STAGES", "register_stage",
     "Transport", "TRANSPORT",

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -408,6 +409,23 @@ _LC_WIDTHS = (0, 8, 16, 32)    # stored word width per header code
 _LC_LENS = tuple(LC_CHUNK * w // 32 for w in _LC_WIDTHS)   # payload words
 
 
+def transmitted_bits(payload_len, static_bits: int):
+    """THE traced transmitted-size accounting every accessor shares
+    (`Pipeline.wire_bits`, `EncodedLC.wire_bits`, `stage_report`,
+    `transport._kv_wire_bytes`): `static_bits` (a python int — headers,
+    tables, length fields) plus 32 bits per transmitted payload word.
+    The static part is folded into the WORD count as exact int32 and
+    converted to f32 ONCE: exact through 2^24 total words, one final
+    rounding (never accumulated drift) beyond, and well-defined up to
+    2^31 words (8 GiB of payload — beyond any single wire this repo can
+    hold in device memory, since the padded capacity buffer is at least
+    as large; int32 would wrap past that, f32-per-term would drift far
+    sooner).  This JAX has no int64, hence the envelope."""
+    static_words, rem = divmod(static_bits, 32)
+    words = payload_len + jnp.int32(static_words)
+    return 32.0 * words.astype(jnp.float32) + rem
+
+
 def lc_chunk_count(n_words: int) -> int:
     return -(-n_words // LC_CHUNK)
 
@@ -463,13 +481,15 @@ def lc_narrow_chunks(chunks: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
                                jnp.where(c == 3, chunks, jnp.uint32(0))))
 
 
-def lc_compact_payload(sel: jnp.ndarray, codes: jnp.ndarray):
-    """Concatenate the narrowed chunks at their true lengths.  Returns
-    (payload uint32[n_chunks * LC_CHUNK] with the tail zero, payload_len
-    int32 scalar — the words a real transport moves)."""
+def compact_chunks(sel: jnp.ndarray, lens: jnp.ndarray):
+    """Concatenate per-chunk word prefixes at their true lengths.  sel:
+    uint32[n_chunks, LC_CHUNK] (each chunk's payload left-aligned), lens:
+    int32[n_chunks] words used per chunk (<= LC_CHUNK).  Returns (payload
+    uint32[n_chunks * LC_CHUNK] with the tail zero, payload_len int32
+    scalar — the words a real transport moves).  Shared by the zero/
+    narrow chunk coder and the `ent` entropy stage."""
     n_chunks = sel.shape[0]
     cap = n_chunks * LC_CHUNK
-    lens = lc_chunk_lens(codes)
     ends = jnp.cumsum(lens)
     offs = ends - lens
     slot = jnp.arange(LC_CHUNK, dtype=jnp.int32)[None, :]
@@ -479,16 +499,26 @@ def lc_compact_payload(sel: jnp.ndarray, codes: jnp.ndarray):
     return payload, ends[-1].astype(jnp.int32)
 
 
-def lc_gather_chunks(payload: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
-    """Inverse of lc_compact_payload: re-pad each chunk's narrowed words to
-    LC_CHUNK slots.  Returns uint32[n_chunks, LC_CHUNK]."""
-    lens = lc_chunk_lens(codes)
+def gather_chunks(payload: jnp.ndarray, lens: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of compact_chunks: re-pad each chunk's words to LC_CHUNK
+    slots.  Returns uint32[n_chunks, LC_CHUNK]."""
     ends = jnp.cumsum(lens)
     offs = ends - lens
     slot = jnp.arange(LC_CHUNK, dtype=jnp.int32)[None, :]
     valid = slot < lens[:, None]
     src = jnp.where(valid, offs[:, None] + slot, 0)
     return jnp.where(valid, payload[src], jnp.uint32(0))
+
+
+def lc_compact_payload(sel: jnp.ndarray, codes: jnp.ndarray):
+    """compact_chunks with the §6 per-code chunk lengths."""
+    return compact_chunks(sel, lc_chunk_lens(codes))
+
+
+def lc_gather_chunks(payload: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of lc_compact_payload: re-pad each chunk's narrowed words to
+    LC_CHUNK slots.  Returns uint32[n_chunks, LC_CHUNK]."""
+    return gather_chunks(payload, lc_chunk_lens(codes))
 
 
 def lc_expand_chunks(padded: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
@@ -555,16 +585,285 @@ class EncodedLC(NamedTuple):
         the payload is variable-length; +32 for the transmitted length.
         Counts the header plane's content words only (its tile padding is
         zeros the receiver re-pads, like the payload's capacity padding).
-        Accumulated in f32: exact through 2^24 words and degrades to
-        rounding (never wraparound) beyond — int32 would go negative at
-        256 MiB payloads, and this JAX has no int64."""
+        Routed through `transmitted_bits` — exact int32 word
+        accumulation with one f32 conversion (see its docstring for the
+        precision envelope)."""
         n_chunks = self.payload.shape[0] // LC_CHUNK
-        bits = 32.0 * self.payload_len.astype(jnp.float32)
-        bits = bits + 32 * lc_header_content_words(n_chunks)
-        bits = bits + self.out_idx.shape[0] * (32 + 32)
+        static = 32 * lc_header_content_words(n_chunks)
+        static += self.out_idx.shape[0] * (32 + 32)
         if self.sign_words is not None:
-            bits = bits + 32 * self.sign_words.shape[0]
-        return bits + 64 + 32       # packed header + payload_len field
+            static += 32 * self.sign_words.shape[0]
+        static += 64 + 32           # packed header + payload_len field
+        return transmitted_bits(self.payload_len, static)
+
+
+# ---------------------------------------------------------------------------
+# ENT — static canonical entropy coder over surviving chunk payloads (§7)
+# ---------------------------------------------------------------------------
+#
+# The ratio the §6 width codes leave on the table is sub-byte: a surviving
+# narrowed chunk still spends a full 8 bits on every byte even when the
+# byte distribution is heavily skewed (small bins cluster around 0x00/0xFF).
+# The `ent` word stage closes that gap cuSZ-style — a STATIC codebook built
+# from the symbol histogram, transmitted in the stage's header plane — with
+# FZ-GPU's lesson kept intact: the transform is an exact, reversible pass
+# over the device word stream, so the §1 guarantee is untouched.
+#
+# Layout.  The input word stream is chunked exactly like §6 (LC_CHUNK = 512
+# words).  Each chunk gets a 2-bit mode code:
+#
+#   mode 0 — all words zero: dropped entirely (0 payload words);
+#   mode 1 — entropy-coded: the chunk's 2048 bytes (little-endian within
+#            each word) encode as a variable-length bitstream, padded to a
+#            whole word count, bit length transmitted per chunk;
+#   mode 2 — verbatim escape: the coded stream would exceed the chunk's
+#            raw 512 words (incompressible bytes), so the chunk is stored
+#            untouched — `ent` never costs more than the header planes.
+#
+# The codebook is one canonical prefix code shared by every chunk of the
+# stream, built from the byte histogram of the SURVIVING (non-zero) chunks:
+# per-symbol Shannon lengths ceil(-log2 p) — read off the f32 exponent
+# bits, no transcendentals, so the wire is deterministic integer work —
+# clipped to ENT_MAX_LEN, then a Kraft-budget sweep over symbols in
+# descending frequency guarantees sum 2^-l <= 1 (a canonical code always
+# exists; frequent symbols keep their ideal lengths).  Only the 256 4-bit
+# LENGTHS are transmitted — canonical codes and the 2^ENT_MAX_LEN decode
+# LUT rebuild from lengths alone, the classic canonical-Huffman trick.
+#
+# Bit order: codes deposit first-bit-at-lowest-bit (LSB-first within
+# uint32 words), so encode is a cumsum + disjoint-bit scatter-add and
+# decode reads a 32-bit window per symbol.  Chunks encode independently —
+# decode is a per-chunk scan (2048 symbols) vmapped across chunks, the
+# same independence cuSZ uses to parallelize Huffman on GPUs.  The jit
+# reference lives here; a fused Pallas kernel slot is documented in the
+# §7 dispatch table.
+
+ENT_MAX_LEN = 12               # max code length; decode LUT = 2^12 entries
+ENT_SYMS = 256                 # byte alphabet
+_ENT_CHUNK_SYMS = 4 * LC_CHUNK            # 2048 coded bytes per chunk
+_ENT_CHUNK_CAP_BITS = 32 * LC_CHUNK       # verbatim-escape threshold
+_ENT_BUF_WORDS = _ENT_CHUNK_SYMS * ENT_MAX_LEN // 32   # worst-case coded
+
+# Static bit-reversal table for ENT_MAX_LEN-bit values (the canonical
+# code is MSB-first; the stream is LSB-first — see the bit-order note).
+_rev = np.zeros(1 << ENT_MAX_LEN, np.int32)
+for _j in range(ENT_MAX_LEN):
+    _rev = (_rev << 1) | ((np.arange(1 << ENT_MAX_LEN) >> _j) & 1)
+_ENT_REV = _rev
+del _rev, _j
+
+
+def ent_header_words(n_words: int) -> int:
+    """uint32 words in the STORED `ent` header plane: the 4-bit codebook
+    lengths, the 2-bit per-chunk modes, and the 16-bit per-chunk bit
+    lengths, each tile-padded per the §4 pack layout."""
+    nc = lc_chunk_count(n_words)
+    return (packed_word_count(ENT_SYMS, 4) + packed_word_count(nc, 2)
+            + packed_word_count(nc, 16))
+
+
+def ent_header_content_words(n_chunks: int) -> int:
+    """uint32 words of real header content (what a transport moves; the
+    stored plane's tile padding is zeros the receiver re-pads): 32 words
+    of codebook lengths + 2 bits/chunk of modes + 16 bits/chunk of bit
+    lengths."""
+    return (ENT_SYMS * 4 // 32 + lc_header_content_words(n_chunks)
+            + -(-n_chunks // 2))
+
+
+def _floor_log2_f32(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2 x) for positive normal f32 — the unbiased exponent,
+    pure integer work (deterministic on every backend)."""
+    return ((float_to_bits(x) >> 23) & 0xFF) - 127
+
+
+def ent_code_lengths(hist: jnp.ndarray) -> jnp.ndarray:
+    """Length-limited code lengths (1..ENT_MAX_LEN) from a 256-bin symbol
+    histogram (int32[256]).  Shannon ideal ceil(-log2 p) per symbol
+    (= -floor_log2(p) exactly, read off the f32 exponent), clipped, then
+    repaired to Kraft-feasibility by a budget scan in descending
+    frequency order: each symbol takes the longest of its ideal length
+    and the shortest length the remaining budget can afford while
+    leaving one 2^-ENT_MAX_LEN slot per remaining symbol.  The budget
+    invariant guarantees sum 2^-l <= 1, so canonical codes exist."""
+    lmax = ENT_MAX_LEN
+    total = jnp.maximum(jnp.sum(hist), 1).astype(jnp.float32)
+    p = jnp.maximum(hist.astype(jnp.float32) / total, jnp.float32(2.0**-126))
+    ideal = jnp.where(hist > 0, -_floor_log2_f32(p), lmax)
+    ideal = jnp.clip(ideal, 1, lmax).astype(jnp.int32)
+    order = jnp.argsort(-hist)                 # frequency descending
+    remaining = jnp.arange(ENT_SYMS - 1, -1, -1, dtype=jnp.int32)
+
+    def step(budget, inp):
+        want, rem = inp
+        lmin = lmax - _floor_log2_f32((budget - rem).astype(jnp.float32))
+        lens = jnp.clip(jnp.maximum(want, lmin), 1, lmax)
+        return budget - (jnp.int32(1) << (lmax - lens)), lens
+
+    _, lens_sorted = jax.lax.scan(step, jnp.int32(1 << lmax),
+                                  (ideal[order], remaining))
+    return jnp.zeros(ENT_SYMS, jnp.int32).at[order].set(lens_sorted)
+
+
+def _ent_canonical(lens: jnp.ndarray):
+    """Canonical code assignment from lengths: symbols sorted by
+    (length, symbol) take consecutive codes within their length class.
+    Returns (order int32[256] = symbols in canonical order, codes
+    MSB-first per canonical position, first-bit-aligned code starts)."""
+    lmax = ENT_MAX_LEN
+    count = jnp.zeros(lmax + 1, jnp.int32).at[lens].add(1)
+    first, code = [jnp.int32(0)] * (lmax + 1), jnp.int32(0)
+    for ln in range(1, lmax + 1):
+        code = (code + count[ln - 1]) << 1
+        first[ln] = code
+    first = jnp.stack(first)
+    order = jnp.argsort(lens)                  # stable: (length, symbol)
+    sl = lens[order]
+    rank = jnp.arange(ENT_SYMS, dtype=jnp.int32) - jnp.searchsorted(
+        sl, sl, side="left").astype(jnp.int32)
+    codes = first[sl] + rank
+    return order, sl, codes
+
+
+def ent_encode_table(lens: jnp.ndarray):
+    """(length, LSB-first deposit value) per SYMBOL, from the code
+    lengths: the deposit value is the canonical code bit-reversed within
+    its length so its first (most-significant) bit lands first in the
+    LSB-first stream."""
+    order, sl, codes = _ent_canonical(lens)
+    rev = jnp.asarray(_ENT_REV)[codes] >> (ENT_MAX_LEN - sl)
+    return (jnp.zeros(ENT_SYMS, jnp.int32).at[order].set(sl),
+            jnp.zeros(ENT_SYMS, jnp.uint32).at[order].set(
+                rev.astype(jnp.uint32)))
+
+
+def ent_decode_lut(lens: jnp.ndarray):
+    """(symbol, length) decode LUT indexed by the next ENT_MAX_LEN raw
+    stream bits (LSB-first window): canonical code starts are sorted, so
+    the matching symbol is a searchsorted over the MSB-aligned window,
+    composed with the static bit-reversal."""
+    lmax = ENT_MAX_LEN
+    order, sl, codes = _ent_canonical(lens)
+    starts = codes << (lmax - sl)              # strictly increasing
+    win = jnp.asarray(_ENT_REV)                # raw window -> MSB-aligned
+    j = jnp.clip(jnp.searchsorted(starts, win, side="right") - 1,
+                 0, ENT_SYMS - 1)
+    return order[j].astype(jnp.int32), sl[j]
+
+
+def _ent_chunk_bytes(chunks: jnp.ndarray) -> jnp.ndarray:
+    """uint32[nc, LC_CHUNK] -> int32[nc, 4*LC_CHUNK] byte symbols in
+    stream order (little-endian within each word)."""
+    b = jnp.stack([(chunks >> jnp.uint32(8 * j)) & jnp.uint32(0xFF)
+                   for j in range(4)], axis=-1)
+    return b.reshape(chunks.shape[0], _ENT_CHUNK_SYMS).astype(jnp.int32)
+
+
+def encode_words_ent(words: jnp.ndarray):
+    """Entropy-code a packed uint32 word stream (layout in the module
+    note).  Returns (header_words, payload, payload_len); jit-safe,
+    exact inverse is decode_words_ent.  Reusable on any word plane —
+    gradient shards, KV pages — like every §7 word stage."""
+    n_words = words.shape[0]
+    nc = lc_chunk_count(n_words)
+    wpad = jnp.pad(words, (0, nc * LC_CHUNK - n_words))
+    chunks = wpad.reshape(nc, LC_CHUNK)
+    alive = jnp.max(chunks, axis=1) > 0
+    byts = _ent_chunk_bytes(chunks)
+    # codebook from the byte histogram of SURVIVING chunks only — zero
+    # chunks are dropped whole and must not skew the code lengths
+    hist = jnp.zeros(ENT_SYMS, jnp.int32).at[byts.reshape(-1)].add(
+        jnp.repeat(alive.astype(jnp.int32), _ENT_CHUNK_SYMS))
+    lens = ent_code_lengths(hist)
+    sym_len, sym_code = ent_encode_table(lens)
+
+    # per-chunk bitstream: cumsum the code lengths, deposit each code's
+    # <= 2 word fragments by scatter-ADD (bits are disjoint, so add == or)
+    lns = sym_len[byts]
+    ends = jnp.cumsum(lns, axis=1)
+    offs = ends - lns
+    bitlen = ends[:, -1]
+    code = sym_code[byts]
+    w_idx = offs >> 5
+    boff = (offs & 31).astype(jnp.uint32)
+    lo = code << boff
+    hi = jnp.where(boff > 0,
+                   code >> jnp.where(boff > 0, jnp.uint32(32) - boff,
+                                     jnp.uint32(1)),
+                   jnp.uint32(0))
+
+    def deposit(wi, lo_, hi_):
+        buf = jnp.zeros((_ENT_BUF_WORDS + 1,), jnp.uint32)
+        return buf.at[wi].add(lo_).at[wi + 1].add(hi_)
+
+    coded = jax.vmap(deposit)(w_idx, lo, hi)[:, :LC_CHUNK]
+    modes = jnp.where(~alive, 0,
+                      jnp.where(bitlen <= _ENT_CHUNK_CAP_BITS, 1, 2)
+                      ).astype(jnp.int32)
+    m = modes[:, None]
+    sel = jnp.where(m == 1, coded, jnp.where(m == 2, chunks, jnp.uint32(0)))
+    lens_words = jnp.where(modes == 1, (bitlen + 31) >> 5,
+                           jnp.where(modes == 2, LC_CHUNK, 0)
+                           ).astype(jnp.int32)
+    payload, plen = compact_chunks(sel, lens_words)
+    header = jnp.concatenate([
+        pack_words(lens, 4),
+        pack_words(modes, 2),
+        pack_words(jnp.where(modes == 1, bitlen, 0), 16)])
+    return header, payload, plen
+
+
+def decode_words_ent(header_words: jnp.ndarray, payload: jnp.ndarray,
+                     n_words: int) -> jnp.ndarray:
+    """Exact inverse of encode_words_ent.  n_words is the pre-coding word
+    count; everything needed to decode (codebook lengths, per-chunk modes
+    and bit lengths) rides in the header plane."""
+    nc = lc_chunk_count(n_words)
+    hw_len = packed_word_count(ENT_SYMS, 4)
+    hw_mode = packed_word_count(nc, 2)
+    lens = unpack_words(header_words[:hw_len], ENT_SYMS, 4,
+                        signed=False).astype(jnp.int32)
+    modes = unpack_words(header_words[hw_len:hw_len + hw_mode], nc, 2,
+                         signed=False).astype(jnp.int32)
+    bitlen = unpack_words(header_words[hw_len + hw_mode:], nc, 16,
+                          signed=False).astype(jnp.int32)
+    lens_words = jnp.where(modes == 1, (bitlen + 31) >> 5,
+                           jnp.where(modes == 2, LC_CHUNK, 0)
+                           ).astype(jnp.int32)
+    padded = gather_chunks(payload, lens_words)
+    lut_sym, lut_len = ent_decode_lut(lens)
+    buf = jnp.pad(padded, ((0, 0), (0, 1)))    # window reads cross words
+
+    def dec_chunk(cw):
+        def step(pos, _):
+            wi = pos >> 5
+            bo = (pos & 31).astype(jnp.uint32)
+            win = (cw[wi] >> bo) | jnp.where(
+                bo > 0,
+                cw[wi + 1] << jnp.where(bo > 0, jnp.uint32(32) - bo,
+                                        jnp.uint32(1)),
+                jnp.uint32(0))
+            u = (win & jnp.uint32((1 << ENT_MAX_LEN) - 1)).astype(jnp.int32)
+            # clamp: mode-0/2 lanes decode garbage that the mode mask
+            # discards, but their positions must stay inside the padded
+            # row (a fused-kernel port has no OOB-gather clamping); a
+            # real mode-1 stream never exceeds the cap, so this is a
+            # no-op for it
+            nxt = jnp.minimum(pos + lut_len[u],
+                              jnp.int32(_ENT_CHUNK_CAP_BITS))
+            return nxt, lut_sym[u].astype(jnp.uint32)
+
+        _, syms = jax.lax.scan(step, jnp.int32(0), None,
+                               length=_ENT_CHUNK_SYMS)
+        b = syms.reshape(LC_CHUNK, 4)
+        return (b[:, 0] | (b[:, 1] << jnp.uint32(8))
+                | (b[:, 2] << jnp.uint32(16)) | (b[:, 3] << jnp.uint32(24)))
+
+    decoded = jax.vmap(dec_chunk)(buf)
+    m = modes[:, None]
+    out = jnp.where(m == 1, decoded,
+                    jnp.where(m == 2, padded, jnp.uint32(0)))
+    return out.reshape(-1)[:n_words]
 
 
 def encode_lossless(enc: EncodedPacked, stage: str = "narrow") -> EncodedLC:

@@ -32,6 +32,9 @@ Registered stages (see STAGES / DESIGN.md §7):
     shuffle[:w]   — zigzag sign-fold + byte-plane shuffle
                     (`core.codec.shuffle_words`); w defaults to the pack
                     width
+    ent           — static canonical entropy coder over surviving
+                    chunks, codebook in the header plane
+                    (`core.codec.encode_words_ent`)
 
 Kernel dispatch: known chains map onto the existing fused Pallas kernels
 (`kernels/pack.py`, `kernels/lossless.py`), anything else runs the jit
@@ -144,6 +147,38 @@ class ChunkStage:
 
 
 @dataclasses.dataclass(frozen=True)
+class EntStage:
+    """Static canonical entropy coder over surviving 512-word chunks
+    (codec.encode_words_ent, DESIGN.md §7): a cuSZ-style codebook built
+    from the byte histogram of the non-zero chunks rides in the header
+    plane (4-bit canonical code lengths + 2-bit chunk modes + 16-bit
+    chunk bit lengths); each surviving chunk encodes independently as a
+    variable-length bitstream with a verbatim escape, so the stage never
+    costs more than its header content.  Length-variable: the payload is
+    carried padded to capacity with the transmitted word count (§6
+    pattern)."""
+    transmits_len = True
+
+    def capacity_words(self, n_in: int) -> int:
+        return C.lc_chunk_count(n_in) * C.LC_CHUNK
+
+    def header_words(self, n_in: int) -> int:
+        return C.ent_header_words(n_in)
+
+    def header_content_bits(self, n_in: int) -> int:
+        return 32 * C.ent_header_content_words(C.lc_chunk_count(n_in))
+
+    def encode_words(self, words, n_in: int):
+        return C.encode_words_ent(words)
+
+    def decode_words(self, header, payload, n_in: int):
+        return C.decode_words_ent(header, payload, n_in)
+
+    def spec(self) -> str:
+        return "ent"
+
+
+@dataclasses.dataclass(frozen=True)
 class ShuffleStage:
     """Zigzag sign-fold + byte-plane shuffle (codec.shuffle_words): makes
     the §6 width codes fire on mixed-sign bin streams.  Headerless and
@@ -203,6 +238,12 @@ def _parse_shuffle(name, tokens, *, pack_bits):
     return ShuffleStage(width)
 
 
+def _parse_ent(name, tokens):
+    if tokens:
+        raise ValueError(f"stage {name!r} takes no parameters")
+    return EntStage()
+
+
 # name -> parser(name, arg_tokens, pack_bits=...) -> WordStage instance.
 # Adding a stage = one class + one entry here (+ a DESIGN.md §7 row).
 STAGES = {
@@ -210,6 +251,7 @@ STAGES = {
     "narrow": lambda name, tokens, pack_bits: _parse_chunk(name, tokens),
     "shuffle": lambda name, tokens, pack_bits: _parse_shuffle(
         name, tokens, pack_bits=pack_bits),
+    "ent": lambda name, tokens, pack_bits: _parse_ent(name, tokens),
 }
 
 
@@ -410,7 +452,12 @@ class Pipeline:
         it the final payload capacity is used, which is exact for every
         registered stage (header content depends only on the stage's
         chunk count, recoverable from any tile-aligned capacity — part of
-        the stage contract)."""
+        the stage contract).
+
+        The traced branch routes through `codec.transmitted_bits` —
+        exact int32 word accumulation with one f32 conversion (see its
+        docstring for the precision envelope); adding f32 bit totals
+        instead rounded past 2^24 words."""
         if not self.stages:
             return self._base_bits(enc) + 32 * enc.payload.shape[0]
         if n is not None:
@@ -420,8 +467,8 @@ class Pipeline:
         hdr = sum(st.header_content_bits(sz)
                   for st, sz in zip(self.stages, sizes))
         if self.stages[-1].transmits_len:
-            return (32.0 * enc.payload_len.astype(jnp.float32)
-                    + self._base_bits(enc) + hdr + 32)
+            return C.transmitted_bits(enc.payload_len,
+                                      self._base_bits(enc) + hdr + 32)
         return self._base_bits(enc) + hdr + 32 * enc.payload.shape[0]
 
     def wire_bytes(self, enc: Encoded, n: int | None = None):
@@ -459,9 +506,9 @@ class Pipeline:
             cur_n = st.capacity_words(cur_n)
             # mirror wire_bits exactly: +32 (the transmitted length
             # field) only when this prefix's final stage is
-            # length-variable
+            # length-variable, through the same shared accounting
             if st.transmits_len:
-                bits = base + hdr_bits + 32.0 * float(plen) + 32
+                bits = C.transmitted_bits(plen, base + hdr_bits + 32)
             else:
                 bits = base + hdr_bits + 32 * cur.shape[0]
             rows.append((st.spec(), float(bits)))

@@ -78,20 +78,28 @@ def _kv_wire_bytes(wire):
     """Per-page accounting for a PackedKV-shaped wire (payload /
     payload_len / stages / eb2 / outlier table / overflow).  Traced when a
     stage is length-variable; +4/page for the transmitted length itself.
-    Per page each stage costs its header CONTENT words only — not the
-    tile-padded stored plane (zeros the receiver re-pads); f32
-    accumulation, see EncodedLC.wire_bits for the rationale."""
+    Per page each stage costs its header CONTENT bits only — not the
+    tile-padded stored plane (zeros the receiver re-pads).
+
+    BITS accumulate across stages and pages and divide ONCE at the end —
+    flooring each stage's content to bytes per page dropped sub-byte
+    headers and drifted from `Pipeline.wire_bits` (which sums bits).
+    The traced payload word count sums as exact int32 through the
+    shared `codec.transmitted_bits` accounting (see its docstring for
+    the precision envelope), where the old per-page f32 sum silently
+    rounded past 2^24 total words."""
     cap = wire.payload.shape[-1]
     n_pages = wire.payload_len.size
-    per_page = sum(st.header_content_bits(cap) for st in wire.stages) // 8
+    static_bits = n_pages * sum(st.header_content_bits(cap)
+                                for st in wire.stages)
+    static_bits += (wire.eb2.size * 32 + wire.out_idx.size * 32
+                    + wire.out_val.size * 32 + wire.overflow.size * 8)
     if wire.stages and wire.stages[-1].transmits_len:
-        per_page += 4
-        pay = 4.0 * jnp.sum(wire.payload_len.astype(jnp.float32))
-    else:
-        pay = 4 * wire.payload.size
-    return (n_pages * per_page + pay + wire.eb2.size * 4
-            + wire.out_idx.size * 4 + wire.out_val.size * 4
-            + wire.overflow.size)
+        static_bits += n_pages * 32            # the transmitted lengths
+        words = jnp.sum(wire.payload_len.astype(jnp.int32))
+        return C.transmitted_bits(words, static_bits) / 8.0
+    bits = static_bits + 32 * wire.payload.size
+    return bits // 8 if bits % 8 == 0 else bits / 8.0
 
 
 def wire_bytes(wire, *, pipe: Pipeline | None = None, n: int | None = None):

@@ -15,10 +15,12 @@ from repro.compression.grads import (GradCompressionConfig, compress_shard,
                                      wire_bytes)
 from repro.compression.kv import (kv_quantizer_config, pack_kv,
                                   quantize_kv, unpack_kv)
-from repro.core import (LC_CHUNK, LC_STAGES, QuantizerConfig,
-                        decode_lossless, decode_packed, decode_words_lc,
-                        encode_lossless, encode_packed, encode_words_lc,
+from repro.core import (ENT_MAX_LEN, LC_CHUNK, LC_STAGES, QuantizerConfig,
+                        decode_lossless, decode_packed, decode_words_ent,
+                        decode_words_lc, encode_lossless, encode_packed,
+                        encode_words_ent, encode_words_lc, ent_header_words,
                         lc_header_words, packed_word_count)
+from repro.core.codec import ent_code_lengths, ent_header_content_words, lc_chunk_count
 from repro.kernels import lossless as klc
 
 RNG = np.random.default_rng(61)
@@ -115,6 +117,106 @@ def test_words_lc_roundtrip_property(stage):
         np.testing.assert_array_equal(back, w)
 
     run()
+
+
+# ----------------------------------------------- ent word-stream stage ----
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+@pytest.mark.parametrize("n", [1, 37, LC_CHUNK, LC_CHUNK + 1,
+                               4 * LC_CHUNK + 13])
+def test_words_ent_roundtrip_bitexact(n, pattern):
+    w = _stream(n, pattern)
+    hw, payload, plen = encode_words_ent(jnp.asarray(w))
+    assert hw.shape[0] == ent_header_words(n)
+    assert int(plen) <= payload.shape[0]
+    back = np.asarray(decode_words_ent(hw, payload, n))
+    np.testing.assert_array_equal(back, w)
+
+
+def test_words_ent_zero_stream_is_headers_only():
+    w = jnp.zeros(8 * LC_CHUNK, jnp.uint32)
+    _, _, plen = encode_words_ent(w)
+    assert int(plen) == 0
+
+
+def test_words_ent_chunks_never_cost_more_than_raw():
+    """No chunk may exceed its raw 512 payload words: uniform bytes code
+    at exactly 8 bits/byte (the cap boundary), and when a skewed global
+    codebook would push a chunk's rare bytes past the cap the mode-2
+    escape stores it verbatim instead."""
+    # uniform random bytes: 8-bit codes -> full chunks cost exactly raw
+    n = 4 * LC_CHUNK
+    w = jnp.asarray(_stream(n, "dense"))
+    hw, payload, plen = encode_words_ent(w)
+    assert int(plen) == 4 * LC_CHUNK
+    np.testing.assert_array_equal(np.asarray(decode_words_ent(hw, payload,
+                                                              n)),
+                                  np.asarray(w))
+    # skewed codebook + one dense chunk: its rare bytes would code past
+    # 32 * LC_CHUNK bits -> verbatim escape, still exactly raw cost
+    w2 = np.ones(5 * LC_CHUNK, np.uint32)
+    w2[:LC_CHUNK] = _stream(LC_CHUNK, "dense")
+    hw2, payload2, plen2 = encode_words_ent(jnp.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(payload2[:LC_CHUNK]),
+                                  w2[:LC_CHUNK])     # stored untouched
+    assert int(plen2) <= 5 * LC_CHUNK
+    np.testing.assert_array_equal(
+        np.asarray(decode_words_ent(hw2, payload2, w2.size)), w2)
+
+
+def test_words_ent_beats_narrow_on_skewed_bytes():
+    """The stage's reason to exist: narrow stops at whole-byte widths —
+    a skewed byte distribution across all four byte planes leaves its
+    width codes nothing to do, while ent codes it near entropy.  The
+    transmitted wire (payload + header content + length) must come in
+    far under narrow's."""
+    n = 16 * LC_CHUNK
+    b = RNG.choice([0, 1, 2], (n, 4), p=[.7, .2, .1]).astype(np.uint32)
+    w = jnp.asarray(b[:, 0] | (b[:, 1] << 8) | (b[:, 2] << 16)
+                    | (b[:, 3] << 24))
+    nc = lc_chunk_count(n)
+    _, _, plen_n = encode_words_lc(w, "narrow")
+    bits_n = 32 * int(plen_n) + 32 * -(-nc // 16) + 32
+    _, _, plen_e = encode_words_ent(w)
+    bits_e = 32 * int(plen_e) + 32 * ent_header_content_words(nc) + 32
+    assert bits_e < 0.25 * bits_n, (bits_e, bits_n)
+
+
+def test_words_ent_roundtrip_property():
+    pytest.importorskip("hypothesis")   # optional dev dep
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def run(data):
+        n = data.draw(st.integers(1, 3 * LC_CHUNK), label="n")
+        seed = data.draw(st.integers(0, 2 ** 32 - 1), label="seed")
+        shift = data.draw(st.sampled_from([0, 8, 16, 24, 31]), label="shift")
+        r = np.random.default_rng(seed)
+        w = (r.integers(0, 1 << 32, n, dtype=np.uint32)
+             >> np.uint32(shift)).astype(np.uint32)
+        w[r.random(n) < 0.5] = 0           # mix in zero runs
+        hw, payload, plen = encode_words_ent(jnp.asarray(w))
+        back = np.asarray(decode_words_ent(hw, payload, n))
+        np.testing.assert_array_equal(back, w)
+
+    run()
+
+
+def test_ent_code_lengths_kraft_feasible():
+    """Every histogram — uniform, skewed, degenerate — must yield
+    lengths in [1, ENT_MAX_LEN] with Kraft sum <= 1 (a canonical prefix
+    code exists), including the empty histogram of an all-zero stream."""
+    cases = [np.zeros(256, np.int64),
+             np.ones(256, np.int64),
+             np.eye(1, 256, 0, dtype=np.int64).ravel() * 1000,
+             RNG.integers(0, 1000, 256).astype(np.int64),
+             np.array([2 ** 20] + [1] * 255, np.int64)]
+    for hist in cases:
+        lens = np.asarray(ent_code_lengths(jnp.asarray(hist, jnp.int32)))
+        assert lens.min() >= 1 and lens.max() <= ENT_MAX_LEN, lens
+        assert np.sum(2.0 ** -lens) <= 1.0 + 1e-12, np.sum(2.0 ** -lens)
 
 
 # ------------------------------------------------- EncodedLC end-to-end ---

@@ -45,6 +45,7 @@ def _mixed_sign_rel(n):
     "abs:0.0001:cap=0.015625|pack:16|narrow",
     "rel:0.001|pack:32|shuffle:32|narrow",
     "abs:0.001:cap=0.25:dtype=float64|pack:16|zero",
+    "abs:0.001|pack:8|zero|narrow|ent",
 ])
 def test_spec_parse_print_roundtrip(spec):
     pipe = parse_pipeline(spec)
@@ -64,7 +65,8 @@ def test_bare_shuffle_inherits_pack_width():
     "", "abs:0.001", "pack:8|abs:0.001", "abs:0.001|pack:12",
     "abs:0.001|pack:8|wavelet", "abs|pack:8", "abs:0.001:k=2|pack:8",
     "zero|abs:0.001|pack:8", "abs:0.001|pack:8|shuffle:9",
-    "abs:0.001|pack:8|zero:5",
+    "abs:0.001|pack:8|zero:5", "abs:0.001|pack:8|ent:5",
+    "abs:0.001|pack:8|ent:k=2",
 ])
 def test_spec_parse_rejects_malformed(bad):
     with pytest.raises((ValueError, KeyError)):
@@ -181,6 +183,9 @@ def test_unknown_chain_falls_back_to_reference():
     "rel:0.01|pack:16|shuffle|narrow",
     "rel:0.01|pack:32|shuffle|zero|narrow",
     "noa:0.0001|pack:32|shuffle:32",
+    "abs:0.01|pack:8|narrow|ent",            # entropy stage on top
+    "rel:0.01|pack:16|shuffle|narrow|ent",
+    "noa:0.0001|pack:32|ent",                # ent straight after pack
 ])
 def test_novel_chain_roundtrip_holds_guarantee(spec):
     """Chains the forked surfaces could NOT express: decode must still be
@@ -200,6 +205,63 @@ def test_novel_chain_roundtrip_holds_guarantee(spec):
         rel = np.abs((x[m].astype(np.float64) - y[m])
                      / x[m].astype(np.float64))
         assert rel.max() <= eb
+
+
+# ----------------------------------------------------------- ent stage ----
+
+def test_every_registry_preset_extended_with_ent_is_bit_transparent():
+    """Appending `|ent` to ANY registry preset must leave the decoded
+    stream bit-identical (the stage is an exact inverse) while the
+    encode/decode dispatch still works end to end."""
+    from repro.configs.registry import PIPELINES, get_pipeline
+
+    n = 20_000
+    x = jnp.asarray(_mix(n))
+    for name in sorted(PIPELINES):
+        spec = get_pipeline(name)
+        if spec.endswith("|ent"):
+            continue                      # already entropy-terminated
+        base = parse_pipeline(spec)
+        ext = parse_pipeline(spec + "|ent")
+        eb = 1e-2 if base.quant.eb == 1.0 else None   # placeholder bounds
+        y0 = np.asarray(base.decode(base.encode(x, eb=eb, kernels=False),
+                                    n=n, kernels=False))
+        y1 = np.asarray(ext.decode(ext.encode(x, eb=eb, kernels=False),
+                                   n=n, kernels=False))
+        np.testing.assert_array_equal(y0.view(np.uint32),
+                                      y1.view(np.uint32), err_msg=name)
+
+
+def test_ent_chain_falls_back_to_reference_dispatch():
+    pipe = parse_pipeline("abs:0.01|pack:16|narrow|ent")
+    assert pipe.kernel_dispatch() is None
+    x = jnp.asarray(_mix(30_000))
+    a = pipe.encode(x, kernels=False)
+    b = pipe.encode(x, kernels=True, interpret=True)   # falls back
+    np.testing.assert_array_equal(np.asarray(a.payload),
+                                  np.asarray(b.payload))
+    np.testing.assert_array_equal(np.asarray(a.headers[1]),
+                                  np.asarray(b.headers[1]))
+
+
+def test_ent_wire_accounting_counts_transmitted_prefix_only():
+    """wire_bits must count payload_len words + header content + the
+    length field — never the capacity padding — and stage_report's last
+    row must mirror it exactly."""
+    n = 1 << 17
+    x = np.zeros(n, np.float32)
+    x[: n // 16] = RNG.standard_normal(n // 16).astype(np.float32) * 3e-3
+    pipe = parse_pipeline("abs:0.001|pack:16|narrow|ent")
+    enc = pipe.encode(jnp.asarray(x), kernels=False)
+    sizes = pipe.stage_sizes(n)
+    hdr = sum(st.header_content_bits(sz)
+              for st, sz in zip(pipe.stages, sizes[:-1]))
+    base = 64 + enc.out_idx.shape[0] * 64      # header + outlier table
+    want = 32 * int(enc.payload_len) + hdr + 32 + base
+    assert float(pipe.wire_bits(enc, n)) == want
+    assert float(pipe.wire_bits(enc)) == want      # capacity-idempotent
+    rows = pipe.stage_report(jnp.asarray(x))
+    assert float(rows[-1][1]) == want
 
 
 # ------------------------------------------------------- shuffle stage ----
@@ -306,7 +368,8 @@ def test_compressed_shard_unifies_the_fork():
 
 
 @pytest.mark.parametrize("spec", ["abs:1.0:cap=0.015625|pack:8|narrow",
-                                  "abs:1.0:cap=0.015625|pack:8|shuffle|zero"])
+                                  "abs:1.0:cap=0.015625|pack:8|shuffle|zero",
+                                  "abs:1.0:cap=0.015625|pack:8|narrow|ent"])
 def test_compressed_mean_pipeline_transparent_under_shard_map(spec):
     """compressed_mean through ANY pipeline must produce the same mean
     and residual bits as the stage-free wire (stages are exact), under
@@ -348,7 +411,7 @@ def test_pack_kv_stage_chains_roundtrip():
     x[:, :, 160:, :] = 0.0
     q = quantize_kv(jnp.asarray(x), kv_quantizer_config())
     pk = pack_kv(q)
-    for stages in ("zero", "narrow", "shuffle|narrow"):
+    for stages in ("zero", "narrow", "shuffle|narrow", "narrow|ent"):
         p = pack_kv(q, stages=stages)
         back = unpack_kv(p)
         for a, b in zip(q, back):

@@ -343,6 +343,125 @@ def test_wire_bytes_is_the_single_accessor():
         wire_bytes(shard.enc)                 # Encoded needs its pipe
 
 
+def test_kv_wire_bytes_equals_per_page_pipeline_accounting():
+    """Regression (per-page byte flooring): `_kv_wire_bytes` must agree
+    bit-for-bit with summing each page's `Pipeline.wire_bytes` — bits
+    accumulated across stages and pages, divided once — for staged
+    chains including `ent`."""
+    from repro.core.pipeline import (Encoded, PackStage, Pipeline,
+                                     QuantStage)
+
+    x = RNG.standard_normal((2, 256, 64)).astype(np.float32)
+    x[:, 160:, :] = 0.0
+    q = quantize_kv(jnp.asarray(x), kv_quantizer_config())
+    table_bytes = (q.eb2.size * 4 + q.out_idx.size * 4
+                   + q.out_val.size * 4 + q.overflow.size)
+    none = jnp.zeros((0,), jnp.int32)
+    for stages in ("zero", "narrow", "shuffle|narrow", "narrow|ent"):
+        pk = pack_kv(q, stages=stages)
+        pipe = Pipeline(QuantStage("abs", 1.0), PackStage(8), pk.stages)
+        n_page = 128 * 64
+        pages = pk.payload.reshape(-1, pk.payload.shape[-1])
+        plens = pk.payload_len.reshape(-1)
+        hdrs = [h.reshape(pages.shape[0], h.shape[-1]) for h in pk.headers]
+        per_page = 0.0
+        for i in range(pages.shape[0]):
+            enc = Encoded(pages[i], plens[i],
+                          tuple(h[i] for h in hdrs), none,
+                          none.astype(jnp.uint32), jnp.int32(0),
+                          jnp.bool_(False), None, None)
+            # the page shares nothing with the §4 outlier/eb header —
+            # subtract the empty-table base the Pipeline accessor adds
+            per_page += float(pipe.wire_bytes(enc, n_page)) - 64 / 8
+        assert float(wire_bytes(pk)) == per_page + table_bytes, stages
+
+
+def test_kv_wire_bytes_keeps_sub_byte_header_content():
+    """Regression: a stage whose transmitted header content is not a
+    whole byte per page (the §7 contract allows any bit count) must not
+    be floored to 0 bytes — bits accumulate and divide once."""
+    from types import SimpleNamespace
+
+    class TwoBitHeaderStage:
+        """Contract-minimal stage: 2 bits of header content, length-
+        variable payload."""
+        transmits_len = True
+
+        def header_content_bits(self, n_in):
+            return 2
+
+    pages, cap = 3, 8
+    wire = SimpleNamespace(
+        payload=jnp.zeros((pages, cap), jnp.uint32),
+        payload_len=jnp.asarray([5, 0, 2], jnp.int32),
+        stages=(TwoBitHeaderStage(),),
+        eb2=jnp.zeros((pages,), jnp.float32),
+        out_idx=jnp.zeros((pages, 0), jnp.int32),
+        out_val=jnp.zeros((pages, 0), jnp.float32),
+        overflow=jnp.zeros((pages,), bool))
+    want = (pages * 2                       # 2 bits/page of header content
+            + pages * 32                    # transmitted length fields
+            + 32 * (5 + 0 + 2)              # payload words
+            + pages * 32                    # eb2
+            + pages * 8) / 8                # overflow bytes
+    assert float(wire_bytes(wire)) == want
+
+
+def test_kv_wire_bytes_exact_past_2p24_words():
+    """Regression: the per-page f32 length sum silently rounded once the
+    running total passed 2^24 words; the int32 word accumulation with
+    one final conversion must stay exact."""
+    from types import SimpleNamespace
+
+    from repro.core.pipeline import parse_word_stages
+
+    pages = 4096
+    wire = SimpleNamespace(
+        payload=jnp.zeros((pages, codec.LC_CHUNK), jnp.uint32),
+        payload_len=jnp.full((pages,), 4097, jnp.int32),
+        stages=parse_word_stages("narrow", 8),
+        eb2=jnp.zeros((pages,), jnp.float32),
+        out_idx=jnp.zeros((pages, 0), jnp.int32),
+        out_val=jnp.zeros((pages, 0), jnp.float32),
+        overflow=jnp.zeros((pages,), bool))
+    total_words = pages * 4097                     # 2^24 + 2^12 > 2^24
+    hdr_bits = pages * wire.stages[0].header_content_bits(codec.LC_CHUNK)
+    want = (hdr_bits + pages * 32 + 32 * total_words
+            + pages * 32 + pages * 8) / 8          # exact python int / 8
+    got = float(wire_bytes(wire))
+    assert got == want, (got, want)
+
+
+def test_pipeline_wire_bits_exact_past_2p24_words():
+    """Regression: Pipeline.wire_bits added the static header bits to a
+    traced f32 bit total, which rounds past 2^24 words; the int32 word
+    accumulation must stay exact (and provably differs from the old
+    formula at this size)."""
+    from repro.core.pipeline import Encoded, parse_pipeline
+
+    pipe = parse_pipeline("abs:1.0|pack:8|narrow")
+    n = 1 << 20                               # -> 512 chunks of header
+    static_bits = (64 + pipe.stages[0].header_content_bits(
+        pipe.n_words(n)) + 32)
+    assert static_bits % 32 == 0
+    # > 2^24 transmitted words; the exact total word count (payload +
+    # static header words) is f32-representable, so the single final
+    # conversion is lossless
+    plen = (1 << 24) + 3
+    enc = Encoded(jnp.zeros((0,), jnp.uint32), jnp.int32(plen),
+                  (jnp.zeros((0,), jnp.uint32),),
+                  jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.uint32),
+                  jnp.int32(0), jnp.bool_(False), None, None)
+    total_words = plen + static_bits // 32
+    assert int(np.float32(float(total_words))) == total_words
+    want = 32 * total_words                   # exact python int
+    assert float(pipe.wire_bits(enc, n)) == want
+    # the old bits-domain f32 arithmetic rounds away at this magnitude
+    old = np.float32(32.0) * np.float32(float(plen)) + np.float32(
+        static_bits)
+    assert float(old) != want
+
+
 def test_bytes_moved_per_op():
     x = RNG.standard_normal((2, 256, 64)).astype(np.float32)
     pk = pack_kv(quantize_kv(jnp.asarray(x), kv_quantizer_config()))
