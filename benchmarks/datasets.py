@@ -120,10 +120,43 @@ def grad_adversarial():
     return (r.standard_normal(N) * 3e-3).astype(np.float32)
 
 
+def grad_walk():
+    """EMA-smoothed optimizer-state shard: momentum buffers and
+    accumulated gradients evolve as a slow random walk along the flat
+    layout, so neighbouring values are strongly correlated — the
+    representative input for the closed-loop `delta` predictor
+    (DESIGN.md §9).  iid suites (gradsmooth/gradadv) carry no
+    neighbour correlation and delta mathematically cannot win there;
+    this one it must."""
+    r = _rng("gradwalk")
+    steps = r.standard_normal(N).astype(np.float32)
+    walk = np.cumsum(steps, dtype=np.float64)
+    walk *= 3e-3 / max(np.sqrt(np.mean(walk * walk)), 1e-30)
+    return (walk + 1e-5 * steps).astype(np.float32)
+
+
 GRAD_SUITES = {
     "gradsmooth": grad_smooth, "gradsparse": grad_sparse,
-    "gradadv": grad_adversarial,
+    "gradadv": grad_adversarial, "gradwalk": grad_walk,
 }
+
+
+def nyx_plane(grid: int = 1024):
+    """2-D smooth cosmology plane (NYX-like slice): a low-pass random
+    field with NYX's lognormal amplitude character plus a small noise
+    floor — the representative dataset for the 2-D `lorenzo` predictor
+    (DESIGN.md §9).  Returned as (grid, grid) float32 so the plane
+    structure reaches the pred stage via `pred_shape`."""
+    r = _rng("nyxplane")
+    white = r.standard_normal((grid, grid))
+    ky = np.fft.fftfreq(grid)[:, None]
+    kx = np.fft.fftfreq(grid)[None, :]
+    lowpass = np.exp(-(kx * kx + ky * ky) / (2 * 0.01 ** 2))
+    smooth = np.fft.ifft2(np.fft.fft2(white) * lowpass).real
+    smooth /= max(np.sqrt(np.mean(smooth * smooth)), 1e-30)
+    field = np.exp(smooth * 1.4 + 8.0) + 2.0 * r.standard_normal(
+        (grid, grid))
+    return field.astype(np.float32)
 
 
 def rel_mixed():

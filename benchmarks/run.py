@@ -14,11 +14,14 @@ beyond-paper system benchmarks.  Prints ``name,us_per_call,derived`` CSV
   packedwire packed vs unpacked wire + codec throughput (beyond paper)
   lossless device-side lossless stages: end-to-end ratio vs packed/f32
            on gradient-shaped + scientific data, KV pages, Pallas
-           parity, the shuffle stage on mixed-sign REL bins, and the
-           `ent` entropy stage over surviving chunk payloads
+           parity, the shuffle stage on mixed-sign REL bins, the
+           `ent` entropy stage over surviving chunk payloads, and the
+           closed-loop predictor rows (`delta` on the correlated
+           gradient walk, 2-D `lorenzo` on the NYX-like plane, §9)
   transfer prefill->decode KV transfer (DESIGN.md §8): PackedCache wire
-           bytes per stage chain vs raw pages, pack/unpack throughput,
-           and simulated link occupancy under load
+           bytes per stage chain (incl. the §9 `kvdelta` page chain)
+           vs raw pages, pack/unpack throughput, and simulated link
+           occupancy under load
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...]
            [--pipeline SPEC|PRESET] [--smoke]
@@ -372,6 +375,11 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
       * mixed-sign REL bins: narrow alone sits at its floor (sign
         extension sets the high bits of every word); the shuffle stage's
         zigzag fold + byte-plane shuffle is what unlocks the win.
+      * closed-loop predictors (DESIGN.md §9): `delta` residual bins on
+        the correlated gradient walk (gradwalk) and 2-D `lorenzo` on the
+        NYX-like plane — each must beat its plain narrow|ent twin where
+        neighbour correlation exists (iid data pays a few % vs ent:
+        folded residuals of white noise are a touch wider than raw bins).
       * KV pages: a cache whose tail pages are unwritten (zeros).
       * Pallas parity: the pipeline's fused-kernel dispatch must be
         bit-identical to its jit reference in interpret mode.
@@ -390,13 +398,19 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
     cut = 1 << 18 if smoke else None      # --smoke: small data, 1 repeat
     reps = 1 if smoke else 5
 
+    # the pred row (§9): closed-loop `delta` residuals on the bin plane
+    # ahead of narrow|ent — must beat plain narrow|ent on the correlated
+    # walk (gradwalk) and must not cost anything on the iid suites
+    grad_chains = ("zero", "narrow", "narrow|ent", "delta|narrow|ent")
     for name, gen in datasets.GRAD_SUITES.items():
         g = jnp.asarray(gen()[:cut])
         n = g.size
-        for stage in ("zero", "narrow", "narrow|ent"):
+        for stage in grad_chains:
+            pred = "delta|" if stage.startswith("delta|") else ""
+            word = stage.removeprefix("delta|")
             cfg = GradCompressionConfig(
                 bin_bits=16,
-                pipeline=f"abs:1.0:cap=0.015625|pack:16|{stage}")
+                pipeline=f"{pred}abs:1.0:cap=0.015625|pack:16|{word}")
             f = jax.jit(lambda v, c=cfg: compress_shard(v, c)[0])
             shard = f(g)
             t = _time(f, g, repeats=reps)
@@ -422,6 +436,26 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
                   f"vs_packed={pk_bits / lc_bits:.2f}x "
                   f"vs_f32={x.size * 32 / lc_bits:.2f}x "
                   f"enc={x.size * 4 / t / 1e9:.2f}GB/s")
+
+    # 2-D smooth plane (NYX-like slice): the `lorenzo` predictor's row
+    # (§9) — the 2-D input's shape reaches the stage as pred_shape, so
+    # residuals are second differences over the plane; must beat the
+    # plain narrow|ent chain on the same data
+    x2 = jnp.asarray(datasets.nyx_plane(512 if smoke else 1024))
+    pk_pipe = parse_pipeline("abs:64.0:cap=0.015625|pack:32")
+    pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x2, kernels=False), x2.size)
+    for chain in ("abs:64.0:cap=0.015625|pack:32|narrow|ent",
+                  "lorenzo|abs:64.0:cap=0.015625|pack:32|narrow|ent"):
+        pipe = parse_pipeline(chain)
+        f = jax.jit(lambda v, p=pipe: p.encode(v))
+        lc = f(x2)
+        t = _time(f, x2, repeats=reps)
+        lc_bits = float(pipe.wire_bits(lc, x2.size))
+        label = "lorenzo+narrow+ent" if pipe.pred else "narrow+ent"
+        _emit(f"lossless.nyxplane.{label}", t * 1e6,
+              f"vs_packed={pk_bits / lc_bits:.2f}x "
+              f"vs_f32={x2.size * 32 / lc_bits:.2f}x "
+              f"enc={x2.size * 4 / t / 1e9:.2f}GB/s")
 
     # mixed-sign REL bins: the shuffle stage's reason to exist (§7), and
     # the entropy stage stacked on top of it
@@ -503,7 +537,7 @@ def transfer(smoke: bool = False):
         raw_pages = 2 * qk.bins.size * 4 + 2 * hot.size * hot.dtype.itemsize
 
         for stages in ("", "zero", "narrow", "shuffle|narrow",
-                       "narrow|ent"):
+                       "narrow|ent", "kvdelta|narrow|ent"):
             f_pack = jax.jit(lambda c, st=stages: pack_cache(c, stages=st))
             f_rt = jax.jit(
                 lambda c, st=stages: unpack_cache(pack_cache(c, stages=st)))
@@ -518,12 +552,15 @@ def transfer(smoke: bool = False):
                   f"{ms:.2f}ms sustainable={link_bps/moved:.1f}migr/s "
                   f"roundtrip={t*1e6:.0f}us")
 
-    # transfer is exact: the unpacked cache must be bit-identical
-    back = unpack_cache(pack_cache(cache, stages="shuffle|narrow"))
-    same = all(np.array_equal(np.asarray(a), np.asarray(b))
-               for a, b in zip(jax.tree.leaves(cache),
-                               jax.tree.leaves(back)))
-    _emit("transfer.roundtrip", 0.0, "bit-identical" if same else "MISMATCH")
+    # transfer is exact: the unpacked cache must be bit-identical — both
+    # for a word-only chain and for the §9 kvdelta page-predictor chain
+    for st in ("shuffle|narrow", "kvdelta|zero|narrow"):
+        back = unpack_cache(pack_cache(cache, stages=st))
+        same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(cache),
+                                   jax.tree.leaves(back)))
+        _emit(f"transfer.roundtrip.{st.replace('|', '+')}", 0.0,
+              "bit-identical" if same else "MISMATCH")
 
 
 TABLES = {

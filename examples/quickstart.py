@@ -4,8 +4,9 @@ minutes.
     PYTHONPATH=src python examples/quickstart.py
 
 One spec string builds the whole LC-style chain (DESIGN.md §7):
-quantizer -> bit-pack -> lossless word stages.  Every decoded value is
-within the bound or bit-identical to the original, whatever the chain.
+value-domain predictor stages (DESIGN.md §9) -> quantizer -> bit-pack ->
+lossless word stages.  Every decoded value is within the bound or
+bit-identical to the original, whatever the chain.
 """
 import numpy as np
 
@@ -23,9 +24,14 @@ x[123] = np.nan
 x[456] = np.inf
 x[789] = 1e-42                      # denormal
 
+# the last spec is a two-domain chain (DESIGN.md §9): `delta` predicts
+# each value from its decoded predecessor — an exact bijection on the
+# bin plane, so the bound survives untouched while the smooth sinusoid
+# collapses to near-zero residuals the word stages then crush
 for spec in ("abs:1e-3|pack:16|narrow",
              "rel:1e-3|pack:32|shuffle|narrow",
-             "noa:1e-4|pack:16|zero"):
+             "noa:1e-4|pack:16|zero",
+             "delta|abs:1e-3|pack:16|narrow|ent"):
     pipe = parse_pipeline(spec)
     mode, eb = pipe.quant.mode, pipe.quant.eb
 

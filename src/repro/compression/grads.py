@@ -59,11 +59,17 @@ class GradCompressionConfig(NamedTuple):
     bin_bits: int = 8               # used when `pipeline` is empty
     outlier_cap_frac: float = 1 / 64
     enabled: bool = True
-    pipeline: str = ""              # spec, e.g. "abs:1.0|pack:8|narrow";
+    pipeline: str = ""              # spec, e.g. "abs:1.0|pack:8|narrow" or
+    #                                 "delta|abs:1.0|pack:16|narrow|ent";
     #                                 the quantizer eb is a placeholder
     #                                 (the traced per-tensor eb overrides)
     #                                 and a spec without cap= inherits
-    #                                 outlier_cap_frac
+    #                                 outlier_cap_frac.  Pred-bearing
+    #                                 specs (DESIGN.md §9) see the shard
+    #                                 as one flat stream; their residual
+    #                                 wires never ring-reduce, so
+    #                                 reduce_sum takes the
+    #                                 gather+dequantize branch (§8).
 
     def pipe(self) -> Pipeline:
         """The compression pipeline this config describes.  `pipeline`
@@ -115,8 +121,10 @@ class CompressedShard:
     @property
     def words(self):
         """The §4 packed bin plane.  For a staged pipeline this decodes
-        the word stages (exact inverses), so it is ALWAYS the same
-        bit-identical plane a stage-free pipeline would ship."""
+        the word stages (exact inverses), so it is the same bit-identical
+        plane a stage-free pipeline would ship — except under a pred
+        chain (§9), where the plane holds the folded residual codes (the
+        pred inverse lives bin-side, in `Pipeline.decode`)."""
         if self.pipe.stages:
             return self.pipe.decode_words(self.enc.headers,
                                           self.enc.payload,

@@ -28,13 +28,16 @@ Two representations:
   * QuantizedKV — int8 bins [..., S, D]: the DECODE layout.  The Pallas
     attention kernel (kernels/kv_attention.py) streams these blocks
     directly; int8 lanes are what the VPU dequantizes cheapest.
-  * PackedKV — the ONE wire layout (DESIGN.md §4/§7): per-page bins
+  * PackedKV — the ONE wire layout (DESIGN.md §4/§7/§9): per-page bins
     bit-packed into uint32 lanes via core.codec.pack_words, optionally
-    run through any chain of pipeline word stages (DESIGN.md §7 —
-    `pack_kv(q, stages="narrow")`, `stages="shuffle|narrow"`,
-    `stages="narrow|ent"`, ...) coded PER PAGE so pages stay
-    independently migratable (each page carries its own stage headers,
-    including `ent`'s per-page codebook).  This is what cache
+    run through a per-page stage chain in the two-domain grammar —
+    leading pred stages (`stages="kvdelta|zero|narrow"`: previous-token
+    delta on the page's bin plane, closed-loop per DESIGN.md §9) and any
+    chain of pipeline word stages (`stages="narrow"`,
+    `stages="shuffle|narrow"`, `stages="narrow|ent"`, ...) coded PER
+    PAGE so pages stay independently migratable (each page carries its
+    own stage headers, including `ent`'s per-page codebook; `kvdelta`
+    never predicts across a page boundary).  This is what cache
     migration / prefill->decode disaggregation ships between hosts — via
     the Transport layer (core.transport, DESIGN.md §8):
     `gather_kv_packed` is `Transport.all_gather` on the wire and
@@ -54,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, codec
+from repro.core import predict as predict
 from repro.core.bitops import pow2_floor
 from repro.core.pipeline import parse_word_stages
 from repro.core.quantizer import quantize_abs
@@ -141,6 +145,28 @@ def _word_stages(stages) -> tuple:
     return parse_word_stages(stages, 8)
 
 
+def _page_stages(stages):
+    """Split a per-page stage chain into (pred, word) tuples — the
+    two-domain grammar (DESIGN.md §9) applied to page fragments: leading
+    tokens naming registered pred stages ("kvdelta|zero|narrow") form the
+    value-domain chain applied to each page's bin plane; the rest are
+    word stages.  Tuples split on the stage contract (anything with
+    `encode_bins` leads)."""
+    if isinstance(stages, tuple):
+        pred = []
+        while stages and hasattr(stages[0], "encode_bins"):
+            pred.append(stages[0])
+            stages = stages[1:]
+        return tuple(pred), _word_stages(stages)
+    parts = [p.strip() for p in str(stages).split("|") if p.strip()]
+    npred = 0
+    while (npred < len(parts)
+           and parts[npred].split(":")[0] in predict.PRED_STAGES):
+        npred += 1
+    return (predict.parse_pred_stages("|".join(parts[:npred])),
+            _word_stages("|".join(parts[npred:])))
+
+
 @jax.tree_util.register_pytree_node_class
 class PackedKV:
     """The ONE wire form of QuantizedKV: per-page packed words, run
@@ -151,7 +177,7 @@ class PackedKV:
     `payload_len`."""
 
     def __init__(self, payload, payload_len, headers, eb2, out_idx,
-                 out_val, overflow, *, stages=()):
+                 out_val, overflow, *, stages=(), pred=()):
         self.payload = payload        # uint32 [..., n_pages, cap_words]
         self.payload_len = payload_len  # int32 [..., n_pages]
         self.headers = headers        # tuple of uint32 [..., n_pages, hw]
@@ -159,15 +185,17 @@ class PackedKV:
         self.out_idx = out_idx        # int32 [..., n_pages, cap]
         self.out_val = out_val        # f32   [..., n_pages, cap]
         self.overflow = overflow      # bool  [..., n_pages]
-        self.stages = stages
+        self.stages = stages          # word-domain chain (per page)
+        self.pred = pred              # value-domain chain (per page, §9)
 
     def tree_flatten(self):
         return ((self.payload, self.payload_len, self.headers, self.eb2,
-                 self.out_idx, self.out_val, self.overflow), (self.stages,))
+                 self.out_idx, self.out_val, self.overflow),
+                (self.stages, self.pred))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, stages=aux[0])
+        return cls(*children, stages=aux[0], pred=aux[1])
 
     # --- legacy field views ------------------------------------------------
     @property
@@ -206,25 +234,32 @@ class PackedKV:
 
 def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
     """Bit-pack a quantized cache for the wire, optionally through a
-    word-stage chain coded per page (stages="narrow", "shuffle|narrow",
-    ...).  Requires page*D % 512 == 0 (whole uint32 tiles per page;
-    page=128 needs D % 4 == 0), and each stage must preserve the page
-    word count (whole LC chunks per page — D % 16 == 0 at page=128 for
-    zero/narrow) so pages stay self-describing."""
+    per-page stage chain (stages="narrow", "shuffle|narrow",
+    "kvdelta|zero|narrow", ...).  Leading pred stages (DESIGN.md §9 —
+    `kvdelta` is the shipped one) transform each page's (page, D) bin
+    plane closed-loop before packing: token 0 is unpredicted, so a page
+    never references another page and migrated pages decode bit-exactly
+    on the receiving host.  Requires page*D % 512 == 0 (whole uint32
+    tiles per page; page=128 needs D % 4 == 0), and each word stage must
+    preserve the page word count (whole LC chunks per page — D % 16 == 0
+    at page=128 for zero/narrow) so pages stay self-describing."""
     from repro.core.pipeline import encode_word_stages, word_stage_sizes
 
-    st = _word_stages(stages)
+    pred, st = _page_stages(stages)
     *lead, s, d = q.bins.shape
     n_pages = s // page
     per = page * d
     assert per % (4 * codec.PACK_LANES) == 0, (page, d)
     flat = q.bins.reshape(-1, per).astype(jnp.int32)
+    if pred:
+        flat = jax.vmap(lambda b: predict.encode_pred_stages(
+            pred, b, (page, d), 8))(flat)
     words = jax.vmap(lambda b: codec.pack_words(b, 8))(flat)
     wpp = per // 4
     if not st:
         plen = jnp.full((*lead, n_pages), wpp, jnp.int32)
         return PackedKV(words.reshape(*lead, n_pages, wpp), plen, (),
-                        q.eb2, q.out_idx, q.out_val, q.overflow)
+                        q.eb2, q.out_idx, q.out_val, q.overflow, pred=pred)
     sizes = word_stage_sizes(st, wpp)
     assert all(sz == wpp for sz in sizes), (
         "stage chain must preserve the per-page word count so pages stay "
@@ -235,7 +270,7 @@ def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
     headers = tuple(h.reshape(*lead, n_pages, h.shape[-1]) for h in headers)
     return PackedKV(payload.reshape(*lead, n_pages, -1),
                     plen.reshape(*lead, n_pages), headers, q.eb2,
-                    q.out_idx, q.out_val, q.overflow, stages=st)
+                    q.out_idx, q.out_val, q.overflow, stages=st, pred=pred)
 
 
 def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
@@ -257,6 +292,12 @@ def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
     d = per // page
     bins = jax.vmap(lambda w: codec.unpack_words(w, per, 8))(
         words.reshape(-1, wpp))
+    if p.pred:
+        # decode-side prediction (§9): integrate each page's residual
+        # codes back into bins — page-local, so this is exact wherever
+        # the page landed (migration never splits a page)
+        bins = jax.vmap(lambda b: predict.decode_pred_stages(
+            p.pred, b, (page, d), 8))(bins)
     bins = bins.astype(jnp.int8).reshape(*lead, n_pages * page, d)
     return QuantizedKV(bins, p.eb2, p.out_idx, p.out_val, p.overflow)
 

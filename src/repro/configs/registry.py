@@ -101,11 +101,21 @@ PIPELINES = {
     # entropy-coded gradient wire (§7 `ent`: canonical codebook over the
     # bytes of the chunks that survive narrow)
     "grad-wire-16-ent": "abs:1.0:cap=0.015625|pack:16|narrow|ent",
+    # closed-loop predictor gradient wire (§9 `delta` residuals ahead of
+    # the quantizer; never ring-reduces — the §8 gather path moves it)
+    "grad-wire-pred": "delta|abs:1.0:cap=0.015625|pack:16|narrow|ent",
     # scientific-data archival-grade device chains (paper eval bound 1e-3)
     "sci-abs-narrow": "abs:0.001|pack:32|narrow",
     "sci-rel-narrow": "rel:0.001|pack:32|narrow",
     "sci-rel-shuffle": "rel:0.001|pack:32|shuffle|narrow",
     "sci-rel-ent": "rel:0.001|pack:32|shuffle|narrow|ent",
+    # 2-D Lorenzo predictor chain for plane-structured suites (§9; pass
+    # pred_shape / a 2-D tensor so the plane structure reaches the stage)
+    "sci-lorenzo-ent": "lorenzo|abs:0.001|pack:32|narrow|ent",
+    # KV-page migration chain (§9 `kvdelta`): the per-page stage fragment
+    # is everything after the quantizer spec — pack_kv re-quantizes with
+    # its own per-page bound, so the eb here is a placeholder
+    "kv-delta": "kvdelta|abs:1.0|pack:8|zero|narrow",
     # the full chain exercised by CI's smoke step
     "smoke-chain": "rel:0.001|pack:8|zero|narrow",
 }

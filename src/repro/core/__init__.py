@@ -4,6 +4,7 @@ contribution), as a composable JAX module.
 Public API:
     QuantizerConfig             — mode ('abs'|'rel'|'noa'), error bound, widths
     Pipeline / parse_pipeline   — LC-style composable chain + spec strings (§7)
+    PRED_STAGES / parse_pred_stages — closed-loop value-domain predictors (§9)
     Encoded                     — the one pipeline wire container (§7)
     Transport / TRANSPORT       — the one compressed-wire mover (§8)
     quantize / Quantized        — bins + outlier flags + recon (jit-safe)
@@ -27,8 +28,10 @@ from .codec import (ENT_MAX_LEN, ENT_SYMS, LC_CHUNK, LC_STAGES,
                     roundtrip_dense, shuffle_word_count, shuffle_words,
                     unpack_flags, unpack_words, unshuffle_words)
 from .config import QuantizerConfig
-from .pipeline import (STAGES, Encoded, Pipeline, parse_pipeline,
+from .pipeline import (GRAMMAR, STAGES, Encoded, Pipeline, parse_pipeline,
                        register_stage)
+from .predict import (PRED_STAGES, DeltaStage, KVDeltaStage, LorenzoStage,
+                      parse_pred_stages, register_pred_stage)
 from .quantizer import (Quantized, dequantize_abs, dequantize_rel, quantize,
                         quantize_abs, quantize_abs_unprotected, quantize_noa,
                         quantize_rel, quantize_rel_library)
@@ -49,6 +52,8 @@ __all__ = [
     "ENT_MAX_LEN", "ENT_SYMS",
     "shuffle_words", "unshuffle_words", "shuffle_word_count",
     "Pipeline", "parse_pipeline", "Encoded", "STAGES", "register_stage",
+    "GRAMMAR", "PRED_STAGES", "register_pred_stage", "parse_pred_stages",
+    "DeltaStage", "LorenzoStage", "KVDeltaStage",
     "Transport", "TRANSPORT",
     "serialize", "deserialize", "compression_ratio",
     "log2approx", "pow2approx", "float_to_bits", "bits_to_float",

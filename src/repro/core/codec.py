@@ -326,11 +326,17 @@ class EncodedPacked(NamedTuple):
 
 
 def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None, *,
-                  return_quantized: bool = False) -> EncodedPacked:
+                  return_quantized: bool = False,
+                  bin_transform=None) -> EncodedPacked:
     """Quantize + bit-pack in one jit-safe call (reference path; the fused
     Pallas pipeline in kernels/pack.py is its bit-exact device twin).
     With return_quantized, also returns the local Quantized (outlier/recon
-    planes stay on-device for residual bookkeeping, never on the wire)."""
+    planes stay on-device for residual bookkeeping, never on the wire).
+    `bin_transform` (optional) is an exact int32 bijection applied to the
+    bin plane just before packing — the value-domain predictor hook
+    (core.predict / DESIGN.md §9).  It must be inverted by the matching
+    `bin_untransform` in decode_packed; the returned Quantized keeps the
+    UNtransformed bins so residual bookkeeping stays in the value domain."""
     flat = x.reshape(-1)
     n = flat.shape[0]
     k = cfg.outlier_cap(n)
@@ -344,7 +350,8 @@ def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None, *,
     (idx,) = jnp.nonzero(qt.outlier, size=k, fill_value=n)
     safe_idx = jnp.minimum(idx, n - 1)
     payload = jnp.where(idx < n, float_to_bits(flat)[safe_idx], 0)
-    words = pack_words(qt.bins, cfg.bin_bits)
+    bins = qt.bins if bin_transform is None else bin_transform(qt.bins)
+    words = pack_words(bins, cfg.bin_bits)
     sign_words = None if qt.sign is None else pack_flags(qt.sign)
     enc = EncodedPacked(words, idx.astype(jnp.int32),
                         payload.astype(jnp.uint32), n_out, n_out > k,
@@ -354,15 +361,19 @@ def encode_packed(x: jnp.ndarray, cfg: QuantizerConfig, eb=None, *,
 
 
 def decode_packed(enc: EncodedPacked, cfg: QuantizerConfig, n: int | None = None,
-                  shape=None, dtype=None):
+                  shape=None, dtype=None, bin_untransform=None):
     """Unpack + dequantize + exact outlier restore.  `n` (or `shape`) gives
-    the true element count — the packed stream carries pad words."""
+    the true element count — the packed stream carries pad words.
+    `bin_untransform` inverts the encode-side `bin_transform` on the
+    unpacked plane before dequantize (core.predict / DESIGN.md §9)."""
     if n is None:
         if shape is None:
             raise ValueError("decode_packed needs n or shape")
         n = int(np.prod(shape))
     dt = jnp.dtype(dtype or cfg.dtype)
     bins = unpack_words(enc.words, n, cfg.bin_bits)
+    if bin_untransform is not None:
+        bins = bin_untransform(bins)
     if cfg.mode == "rel":
         sign = unpack_flags(enc.sign_words, n)
         recon = q.dequantize_rel(bins, sign, cfg, dtype=dt)

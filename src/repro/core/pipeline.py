@@ -1,14 +1,16 @@
-"""LC-style composable pipeline API (DESIGN.md §7).
+"""LC-style composable pipeline API (DESIGN.md §7, value stages §9).
 
 The paper's LC framework is a *chain of interchangeable components* — a
 quantizer followed by lossless stages.  This module exposes that chain as
 one object instead of forked per-combination surfaces: a `Pipeline`
 parsed from a spec string like
 
-    "rel:1e-3|pack:8|zero|narrow"
+    "delta|rel:1e-3|pack:8|zero|narrow"
 
-is a quantizer stage, a bit-pack stage, and any number of registered
-lossless *word stages*, each transforming the packed uint32 word stream
+is any number of value-domain predictor stages (`core.predict`, applied
+closed-loop around the quantizer — DESIGN.md §9), a quantizer stage, a
+bit-pack stage, and any number of registered lossless *word stages*,
+each transforming the packed uint32 word stream
 exactly and reversibly.  Encoding produces one `Encoded` wire container
 (final payload plane + per-stage header planes + transmitted lengths +
 the capped exact-outlier table); `Pipeline.wire_bits` counts exactly the
@@ -44,6 +46,7 @@ test), so the §1 guarantee is untouched by dispatch.
     chain                         fused kernel
     quant|pack                    kernels.pack.encode_packed
     quant|pack|zero or |narrow    kernels.lossless.encode_packed_lc
+    pred|...                      jit reference (open slot, DESIGN.md §9)
     anything else                 jit reference (core.codec)
 
 `kernels=None` (auto) uses the fused path only on a real TPU backend;
@@ -59,10 +62,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import codec as C
+from . import predict as P
 from .config import QuantizerConfig
 
 _QUANT_MODES = ("abs", "rel", "noa")
 _CAP_DEFAULT = 0.125          # QuantizerConfig.outlier_cap_frac default
+
+# The two-domain spec grammar (DESIGN.md §9): value-domain pred stages
+# lead, then the quantizer, the packer, and word-domain stages.
+GRAMMAR = ('pipeline = { pred-stage "|" } quant:<eb> "|" pack:<bits> '
+           '{ "|" word-stage }')
 
 
 class Encoded(NamedTuple):
@@ -260,6 +269,17 @@ def register_stage(name: str, parser) -> None:
     STAGES[name] = parser
 
 
+def _unknown_stage_error(tok: str) -> ValueError:
+    """Unknown spec token: name every registered stage in BOTH domains
+    plus the grammar, so a misplaced stage (a pred token after the
+    quantizer, a word token ahead of it) diagnoses itself."""
+    return ValueError(
+        f"unknown stage {tok!r}; registered value-domain (pred) stages: "
+        f"{sorted(P.PRED_STAGES)}; quantizers: {sorted(_QUANT_MODES)}; "
+        f"registered word-domain stages: {sorted(STAGES)}; "
+        f"grammar: {GRAMMAR}")
+
+
 def parse_word_stages(stages, pack_bits: int) -> tuple:
     """Resolve a word-stage chain: a tuple of stage objects passes
     through; a spec fragment ("narrow", "shuffle|narrow", "", "none")
@@ -274,8 +294,7 @@ def parse_word_stages(stages, pack_bits: int) -> tuple:
             continue
         tok = part.split(":")
         if tok[0] not in STAGES:
-            raise ValueError(f"unknown stage {tok[0]!r}; registered: "
-                             f"{sorted(STAGES)}")
+            raise _unknown_stage_error(tok[0])
         out.append(STAGES[tok[0]](tok[0], tok[1:], pack_bits))
     return tuple(out)
 
@@ -316,14 +335,20 @@ def decode_word_stages(stages, headers, payload, n_words: int):
 
 @dataclasses.dataclass(frozen=True)
 class Pipeline:
-    """One LC chain: quantizer -> pack -> word stages.  Hashable (usable
-    as a jit static argument); `parse_pipeline` / `spec()` roundtrip."""
+    """One LC chain: pred stages -> quantizer -> pack -> word stages.
+    Hashable (usable as a jit static argument); `parse_pipeline` /
+    `spec()` roundtrip.  `pred` holds value-domain predictor stages
+    (core.predict, DESIGN.md §9): exact bijections on the quantized bin
+    plane, applied after the quantizer on encode and inverted before
+    dequantize on decode, so the §1 guarantee is inherited unchanged."""
     quant: QuantStage
     pack: PackStage
     stages: tuple = ()
+    pred: tuple = ()
 
     def spec(self) -> str:
-        return "|".join([self.quant.spec(), self.pack.spec()]
+        return "|".join([p.spec() for p in self.pred]
+                        + [self.quant.spec(), self.pack.spec()]
                         + [s.spec() for s in self.stages])
 
     def qcfg(self) -> QuantizerConfig:
@@ -350,7 +375,12 @@ class Pipeline:
 
     def kernel_dispatch(self) -> str | None:
         """Dotted name of the fused Pallas entry this chain maps onto, or
-        None when encode falls back to the jit reference."""
+        None when encode falls back to the jit reference.  Pred chains
+        always take the reference path (encode AND decode) — the fused
+        quantize+pack kernels have no bin-transform slot yet; this is the
+        open row in the DESIGN.md §7 dispatch table."""
+        if self.pred:
+            return None
         if not self.stages:
             return "repro.kernels.pack.encode_packed"
         if len(self.stages) == 1 and isinstance(self.stages[0], ChunkStage):
@@ -377,13 +407,43 @@ class Pipeline:
         return Encoded(payload, plen, headers, ep.out_idx, ep.out_payload,
                        ep.n_outliers, ep.overflow, ep.sign_words, ep.eb)
 
+    # --- pred (value-domain) stage plumbing — DESIGN.md §9 ----------------
+
+    def _pred_shape(self, pred_shape, n: int) -> tuple:
+        shape = (n,) if pred_shape is None else tuple(pred_shape)
+        if int(np.prod(shape)) != n:
+            raise ValueError(f"pred_shape {shape} has {int(np.prod(shape))} "
+                             f"elements, tensor has {n}")
+        return shape
+
+    def _bin_transform(self, pred_shape, n: int):
+        """bins -> codes closure for codec.encode_packed, or None."""
+        if not self.pred:
+            return None
+        shape, bits = self._pred_shape(pred_shape, n), self.pack.bits
+        return lambda bins: P.encode_pred_stages(self.pred, bins, shape, bits)
+
+    def _bin_untransform(self, pred_shape, n: int):
+        """codes -> bins closure for codec.decode_packed, or None."""
+        if not self.pred:
+            return None
+        shape, bits = self._pred_shape(pred_shape, n), self.pack.bits
+        return lambda codes: P.decode_pred_stages(self.pred, codes, shape,
+                                                  bits)
+
     def encode(self, x, eb=None, *, kernels: bool | None = None,
-               interpret: bool | None = None, return_quantized: bool = False):
+               interpret: bool | None = None, return_quantized: bool = False,
+               pred_shape=None):
         """Encode x through the full chain.  kernels=None dispatches the
         fused Pallas path on TPU and the jit reference elsewhere (bit-
         identical); return_quantized forces the reference quantizer so the
-        local outlier/recon planes exist for residual bookkeeping."""
+        local outlier/recon planes exist for residual bookkeeping.
+        `pred_shape` is the value-domain shape the pred stages see
+        (defaults to x.shape) — it lets a flattened stream keep its plane
+        structure for `lorenzo`/`kvdelta`."""
         n = int(np.prod(x.shape))
+        if pred_shape is None:
+            pred_shape = tuple(x.shape)
         use_k = (self._auto_kernels() if kernels is None else kernels)
         if use_k and not return_quantized:
             target = self.kernel_dispatch()
@@ -401,7 +461,9 @@ class Pipeline:
                                (lc.header_words,), lc.out_idx,
                                lc.out_payload, lc.n_outliers, lc.overflow,
                                lc.sign_words, lc.eb)
-        ep, qt = C.encode_packed(x, self.qcfg(), eb, return_quantized=True)
+        ep, qt = C.encode_packed(x, self.qcfg(), eb, return_quantized=True,
+                                 bin_transform=self._bin_transform(
+                                     pred_shape, n))
         enc = self._wrap_packed(ep, n)
         return (enc, qt) if return_quantized else enc
 
@@ -409,25 +471,31 @@ class Pipeline:
 
     def decode(self, enc: Encoded, n: int | None = None, shape=None,
                dtype=None, *, kernels: bool | None = None,
-               interpret: bool | None = None):
-        """Invert the chain: word stages in reverse, then unpack +
-        dequantize + exact outlier restore.  Bit-identical between the
-        fused-kernel and reference back ends."""
+               interpret: bool | None = None, pred_shape=None):
+        """Invert the chain: word stages in reverse, pred stages inverted
+        on the bin plane, then unpack + dequantize + exact outlier
+        restore.  Bit-identical between the fused-kernel and reference
+        back ends.  `pred_shape` must match the encode-side value (it
+        defaults to `shape`, falling back to the flat stream)."""
         if n is None:
             if shape is None:
                 raise ValueError("decode needs n or shape")
             n = int(np.prod(shape))
+        if pred_shape is None and shape is not None:
+            pred_shape = tuple(shape)
         words = self.decode_words(enc.headers, enc.payload, self.n_words(n))
         ep = C.EncodedPacked(words, enc.out_idx, enc.out_payload,
                              enc.n_outliers, enc.overflow, enc.sign_words,
                              enc.eb)
         use_k = (self._auto_kernels() if kernels is None else kernels)
-        if use_k:
+        if use_k and not self.pred:
             from repro.kernels import pack as _kp          # lazy: circular
             return _kp.decode_packed(ep, self.qcfg(), n=n, shape=shape,
                                      dtype=dtype, interpret=interpret)
         return C.decode_packed(ep, self.qcfg(), n=n, shape=shape,
-                               dtype=dtype)
+                               dtype=dtype,
+                               bin_untransform=self._bin_untransform(
+                                   pred_shape, n))
 
     def roundtrip(self, x, eb=None, **kw):
         return self.decode(self.encode(x, eb, **kw), shape=x.shape, **kw)
@@ -438,7 +506,11 @@ class Pipeline:
         bits = 64 + enc.out_idx.shape[0] * (32 + 32)
         if enc.sign_words is not None:
             bits += 32 * enc.sign_words.shape[0]
-        return bits
+        # pred stages transmit their header CONTENT here (§9).  Every
+        # shipped predictor is a static bijection with zero header bits,
+        # but the accounting slot is part of the value-stage contract, so
+        # a future parameterized predictor stays bit-exact for free.
+        return bits + sum(st.header_content_bits() for st in self.pred)
 
     def wire_bits(self, enc: Encoded, n: int | None = None):
         """Transmitted wire size in bits: the final payload's transmitted
@@ -487,17 +559,25 @@ class Pipeline:
 
     # --- per-stage reporting ----------------------------------------------
 
-    def stage_report(self, x, eb=None):
+    def stage_report(self, x, eb=None, pred_shape=None):
         """[(label, transmitted_bits_after_stage), ...] through the chain,
-        starting from the raw tensor.  Reference path (host-callable)."""
+        starting from the raw tensor.  Reference path (host-callable).
+        Pred stages are bijections on the packed plane (zero header bits,
+        §9), so they fold into the base row's label — the word-stage rows
+        then show what the residual plane actually bought."""
         n = int(np.prod(x.shape))
-        ep, _ = C.encode_packed(x, self.qcfg(), eb, return_quantized=True)
+        if pred_shape is None:
+            pred_shape = tuple(x.shape)
+        ep, _ = C.encode_packed(x, self.qcfg(), eb, return_quantized=True,
+                                bin_transform=self._bin_transform(
+                                    pred_shape, n))
         base = self._base_bits(
             Encoded(ep.words, jnp.int32(0), (), ep.out_idx, ep.out_payload,
                     ep.n_outliers, ep.overflow, ep.sign_words, ep.eb))
+        base_label = "|".join([p.spec() for p in self.pred]
+                              + [self.quant.spec(), self.pack.spec()])
         rows = [("raw", n * np.dtype(self.quant.dtype).itemsize * 8),
-                (f"{self.quant.spec()}|{self.pack.spec()}",
-                 base + 32 * ep.words.shape[0])]
+                (base_label, base + 32 * ep.words.shape[0])]
         cur, cur_n = ep.words, self.n_words(n)
         hdr_bits = 0
         for st in self.stages:
@@ -518,23 +598,27 @@ class Pipeline:
 # ------------------------------------------------------------ the parser --
 
 def parse_pipeline(spec) -> Pipeline:
-    """Parse a pipeline spec string ("abs:1e-3|pack:16|zero|narrow") into
-    a Pipeline.  Grammar: stages are '|'-separated; each stage is
-    name[:arg][:key=value...].  The first stage must be a quantizer
-    (abs|rel|noa, positional eb, optional cap=/dtype=), the second must be
-    pack:<bits>, the rest are registered word stages (STAGES).
+    """Parse a pipeline spec string ("delta|abs:1e-3|pack:16|zero|narrow")
+    into a Pipeline.  Grammar (GRAMMAR): stages are '|'-separated; each
+    stage is name[:arg][:key=value...].  Leading tokens naming registered
+    pred stages (predict.PRED_STAGES) form the value-domain chain; the
+    next stage must be a quantizer (abs|rel|noa, positional eb, optional
+    cap=/dtype=), then pack:<bits>, then registered word stages (STAGES).
     `Pipeline.spec()` is the exact inverse."""
     if isinstance(spec, Pipeline):
         return spec
     parts = [p.strip() for p in str(spec).split("|") if p.strip()]
+    pred = []
+    while parts and parts[0].split(":")[0] in P.PRED_STAGES:
+        tok = parts.pop(0).split(":")
+        pred.append(P.PRED_STAGES[tok[0]](tok[0], tok[1:]))
     if len(parts) < 2:
         raise ValueError(
             f"pipeline spec needs at least 'quant:<eb>|pack:<bits>', "
-            f"got {spec!r}")
+            f"got {spec!r}; grammar: {GRAMMAR}")
     qtok = parts[0].split(":")
     if qtok[0] not in _QUANT_MODES:
-        raise ValueError(f"first stage must be one of {_QUANT_MODES}, "
-                         f"got {qtok[0]!r}")
+        raise _unknown_stage_error(qtok[0])
     pos, kw = _parse_params(qtok[1:])
     if len(pos) != 1:
         raise ValueError(f"quantizer stage needs exactly one error bound, "
@@ -553,6 +637,6 @@ def parse_pipeline(spec) -> Pipeline:
     if pack.bits not in (8, 16, 32):
         raise ValueError(f"pack bits must be 8, 16 or 32, got {pack.bits}")
     stages = parse_word_stages("|".join(parts[2:]), pack.bits)
-    pipe = Pipeline(quant, pack, stages)
+    pipe = Pipeline(quant, pack, stages, tuple(pred))
     pipe.qcfg()                       # validate the combination eagerly
     return pipe

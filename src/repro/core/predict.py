@@ -1,0 +1,308 @@
+"""Closed-loop predictor stages — the value-domain half of the two-domain
+pipeline grammar (DESIGN.md §9).
+
+Every high-ratio error-bounded compressor in the survey literature gets
+its ratio from a prediction step ahead of quantization (SZ's Lorenzo,
+cuSZ's dual-quant delta).  The paper's central lesson applies verbatim:
+the predictor must run CLOSED-LOOP — predict from the value the decoder
+will reconstruct, never from the raw input — or per-step quantization
+error accumulates and silently breaks the §1 bound (the open-loop
+regression test in tests/test_predict.py pins the failure).
+
+This module implements closed-loop prediction in the quantized-bin
+domain.  The encoder quantizes pointwise first (the §1 guarantee is
+decided there and never touched again), then transforms the int32 bin
+plane with an exact integer bijection before bit-packing:
+
+    bins --pred.encode_bins--> codes --pack_words--> word plane
+
+Predicting from the previous BIN is predicting from the decoder's view:
+``bin[i-1] * eb2`` IS the reconstruction the decoder holds, so the bin
+delta equals the closed-loop residual scaled by 1/eb2.  ``scan_reference``
+below writes the same computation as the literal per-element
+reconstruction-feedback loop; the vectorized stages are pinned
+bit-identical to it by test.
+
+Exactness: all arithmetic is two's complement.  A residual is folded to
+the pack width ``bits`` (zigzag, so small mixed-sign residuals become
+small unsigned codes and the §6/§7 word stages fire); the decoder
+integrates in int32 — overflow wraps mod 2^32, which is consistent with
+the fold because 2^bits divides 2^32 — and re-wraps to ``bits`` bits.
+True bins satisfy |bin| <= maxbin < 2^(bits-1), so the final wrap
+recovers them exactly: decode output is BIT-IDENTICAL to the bin plane
+of the equivalent pred-free chain, and the §1 guarantee is inherited
+unchanged.
+
+Stage contract (`PredStage`, DESIGN.md §9):
+
+    spec()                        spec token ("delta", "lorenzo", ...)
+    header_content_bits()         transmitted header bits — 0: the
+                                  predictors are static bijections, the
+                                  wire carries no pred header plane
+    encode_bins(bins, shape, bits)  int32[n] -> int32[n] coded plane
+    decode_bins(codes, shape, bits) exact inverse (same shape/bits)
+
+`shape` is the value-domain shape of the ORIGINAL tensor (the
+``pred_shape`` threaded through `Pipeline.encode`/`decode`); `bits` is
+the pack width.  Registered predictors (PRED_STAGES):
+
+    delta     1-D previous-value predictor (gradient shards; any shape
+              is treated as one flat stream)
+    lorenzo   2-D Lorenzo predictor over the last two dims (NYX-style
+              planes; leading dims batch; 1-D input degrades to a
+              single-row plane = delta)
+    kvdelta   previous-token delta along the second-to-last axis (KV
+              pages shaped (page_tokens, head_dim); token 0 is
+              unpredicted so every page decodes independently and
+              migrated pages stay bit-exact; 1-D degrades to delta)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- bit helpers --
+
+def _sign_extend(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Canonical int32 representative of a `bits`-bit two's-complement
+    value (arithmetic shift pair, same idiom as codec.unpack_words)."""
+    v = v.astype(jnp.int32)
+    if bits >= 32:
+        return v
+    sh = jnp.int32(32 - bits)
+    return (v << sh) >> sh
+
+
+def _fold(d: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Residual -> zigzag code, both as sign-extended `bits`-bit int32.
+    Zigzag maps small |d| of either sign to small unsigned codes, so the
+    §6 width codes and the §7 entropy stage fire on residual planes."""
+    d = _sign_extend(d, bits)
+    z = (d << jnp.int32(1)) ^ (d >> jnp.int32(31))
+    return _sign_extend(z, bits)
+
+
+def _unfold(z: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Exact inverse of _fold."""
+    zu = z.astype(jnp.uint32)
+    if bits < 32:
+        zu = zu & jnp.uint32((1 << bits) - 1)
+    d = (zu >> jnp.uint32(1)) ^ (jnp.uint32(0) - (zu & jnp.uint32(1)))
+    return _sign_extend(d.astype(jnp.int32), bits)
+
+
+def _batched_dims(shape, flat_1d) -> tuple:
+    """(batch, rows, cols) view of `shape` for a last-two-dims predictor;
+    1-D/0-D input maps to `flat_1d` (how the stage degrades)."""
+    shape = tuple(int(s) for s in shape)
+    n = 1
+    for s in shape:
+        n *= s
+    if len(shape) < 2:
+        return flat_1d(n)
+    b = 1
+    for s in shape[:-2]:
+        b *= s
+    return (b, shape[-2], shape[-1])
+
+
+# ----------------------------------------------------------------- stages --
+
+@dataclasses.dataclass(frozen=True)
+class DeltaStage:
+    """1-D previous-value predictor: code[i] = fold(bin[i] - bin[i-1]).
+    The whole tensor is one flat stream (gradient shards are 1-D on the
+    wire anyway); the first element is predicted from 0."""
+
+    def spec(self) -> str:
+        return "delta"
+
+    def header_content_bits(self) -> int:
+        return 0
+
+    def encode_bins(self, bins, shape, bits: int):
+        b = bins.reshape(-1)
+        prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), b[:-1]])
+        return _fold(b - prev, bits)
+
+    def decode_bins(self, codes, shape, bits: int):
+        d = _unfold(codes.reshape(-1), bits)
+        return _sign_extend(jnp.cumsum(d, dtype=jnp.int32), bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class LorenzoStage:
+    """2-D Lorenzo predictor over the last two dims: the residual is
+    bin[i,j] - bin[i-1,j] - bin[i,j-1] + bin[i-1,j-1] (out-of-range
+    neighbours read 0), i.e. first differences along both axes — the
+    cuSZ predictor shape.  Leading dims batch; 1-D input is a single-row
+    plane, where lorenzo degrades exactly to delta."""
+
+    @staticmethod
+    def _dims(shape) -> tuple:
+        return _batched_dims(shape, lambda n: (1, 1, n))
+
+    def spec(self) -> str:
+        return "lorenzo"
+
+    def header_content_bits(self) -> int:
+        return 0
+
+    def encode_bins(self, bins, shape, bits: int):
+        p = bins.reshape(self._dims(shape)).astype(jnp.int32)
+        dr = p - jnp.pad(p, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+        dc = dr - jnp.pad(dr, ((0, 0), (0, 0), (1, 0)))[:, :, :-1]
+        return _fold(dc, bits).reshape(-1)
+
+    def decode_bins(self, codes, shape, bits: int):
+        d = _unfold(codes.reshape(self._dims(shape)), bits)
+        b = jnp.cumsum(jnp.cumsum(d, axis=2, dtype=jnp.int32),
+                       axis=1, dtype=jnp.int32)
+        return _sign_extend(b, bits).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVDeltaStage:
+    """Previous-token delta along the second-to-last axis — the KV-page
+    predictor.  On a (page_tokens, head_dim) page each feature channel is
+    predicted from the same channel of the previous token; token 0 is
+    unpredicted, so a page never references another page and migrated
+    pages decode bit-exactly on the receiving device (transport §8).
+    1-D input is a (n, 1) column, where kvdelta degrades to delta."""
+
+    @staticmethod
+    def _dims(shape) -> tuple:
+        return _batched_dims(shape, lambda n: (1, n, 1))
+
+    def spec(self) -> str:
+        return "kvdelta"
+
+    def header_content_bits(self) -> int:
+        return 0
+
+    def encode_bins(self, bins, shape, bits: int):
+        p = bins.reshape(self._dims(shape)).astype(jnp.int32)
+        d = p - jnp.pad(p, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+        return _fold(d, bits).reshape(-1)
+
+    def decode_bins(self, codes, shape, bits: int):
+        d = _unfold(codes.reshape(self._dims(shape)), bits)
+        return _sign_extend(jnp.cumsum(d, axis=1, dtype=jnp.int32),
+                            bits).reshape(-1)
+
+
+# --------------------------------------------------------------- registry --
+
+def _parse_plain(name, tokens, cls):
+    if tokens:
+        raise ValueError(f"pred stage {name!r} takes no parameters")
+    return cls()
+
+
+# name -> parser(name, arg_tokens) -> PredStage instance.  Adding a
+# predictor = one class + one entry here (+ a DESIGN.md §9 row).
+PRED_STAGES = {
+    "delta": lambda name, tokens: _parse_plain(name, tokens, DeltaStage),
+    "lorenzo": lambda name, tokens: _parse_plain(name, tokens, LorenzoStage),
+    "kvdelta": lambda name, tokens: _parse_plain(name, tokens, KVDeltaStage),
+}
+
+
+def register_pred_stage(name: str, parser) -> None:
+    """Register a value-domain stage: parser(name, arg_tokens) -> stage."""
+    PRED_STAGES[name] = parser
+
+
+def parse_pred_stages(stages) -> tuple:
+    """Resolve a pred-stage chain: a tuple of stage objects passes
+    through; a spec fragment ("delta", "kvdelta", "", "none") parses via
+    the PRED_STAGES registry — shared by `parse_pipeline` and per-plane
+    callers (compression/kv.py)."""
+    if isinstance(stages, tuple):
+        return stages
+    out = []
+    for part in str(stages).split("|"):
+        part = part.strip()
+        if not part or part == "none":
+            continue
+        tok = part.split(":")
+        if tok[0] not in PRED_STAGES:
+            raise ValueError(f"unknown pred stage {tok[0]!r}; registered "
+                             f"value-domain stages: {sorted(PRED_STAGES)}")
+        out.append(PRED_STAGES[tok[0]](tok[0], tok[1:]))
+    return tuple(out)
+
+
+# ------------------------------------------------------------- chain ops --
+
+def encode_pred_stages(pred, bins, shape, bits: int):
+    """Apply a pred chain to a flat int32 bin plane, in spec order."""
+    for st in pred:
+        bins = st.encode_bins(bins, shape, bits)
+    return bins
+
+
+def decode_pred_stages(pred, codes, shape, bits: int):
+    """Exact inverse of encode_pred_stages (reverse order)."""
+    for st in reversed(pred):
+        codes = st.decode_bins(codes, shape, bits)
+    return codes
+
+
+# ------------------------------------------- reconstruction-feedback scan --
+
+def _wrap_py(v: int, bits: int) -> int:
+    half = 1 << (bits - 1)
+    return ((v + half) & ((1 << bits) - 1)) - half
+
+
+def _fold_py(d: int, bits: int) -> int:
+    return ((d << 1) ^ (d >> 63)) & ((1 << bits) - 1)
+
+
+def _unfold_py(z: int, bits: int) -> int:
+    return (z >> 1) ^ (-(z & 1))
+
+
+def scan_reference(stage, bins, shape, bits: int):
+    """The closed-loop predictor written as the LITERAL per-element
+    reconstruction-feedback loop the paper describes: predict from the
+    bins reconstructed so far (the decoder's exact view), emit the folded
+    residual, then feed the DECODED residual back into the reconstruction
+    before moving on.  O(n) python — test-only; the vectorized stages are
+    pinned bit-identical to this loop (tests/test_predict.py).
+
+    Returns (codes, recon) as int32 numpy arrays; recon == bins is the
+    closed-loop exactness property itself."""
+    bins = np.asarray(bins, dtype=np.int64).reshape(-1)
+    if isinstance(stage, DeltaStage):
+        dims, lorenzo = (1, bins.size, 1), False
+    elif isinstance(stage, KVDeltaStage):
+        dims, lorenzo = KVDeltaStage._dims(shape), False
+    elif isinstance(stage, LorenzoStage):
+        dims, lorenzo = LorenzoStage._dims(shape), True
+    else:
+        raise TypeError(f"no scan reference for {stage!r}")
+    p = bins.reshape(dims)
+    codes = np.zeros(dims, np.int64)
+    recon = np.zeros(dims, np.int64)
+    nb, nh, nw = dims
+    for b in range(nb):
+        for i in range(nh):
+            for j in range(nw):
+                if lorenzo:
+                    pred = ((int(recon[b, i - 1, j]) if i else 0)
+                            + (int(recon[b, i, j - 1]) if j else 0)
+                            - (int(recon[b, i - 1, j - 1])
+                               if i and j else 0))
+                else:
+                    pred = int(recon[b, i - 1, j]) if i else 0
+                d = _wrap_py(int(p[b, i, j]) - pred, bits)
+                z = _fold_py(d, bits)
+                codes[b, i, j] = _wrap_py(z, bits)
+                recon[b, i, j] = _wrap_py(pred + _unfold_py(z, bits), bits)
+    return (codes.reshape(-1).astype(np.int32),
+            recon.reshape(-1).astype(np.int32))

@@ -149,7 +149,8 @@ def _device_pipeline(cfg: QuantizerConfig, pipeline):
 
 def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
                       stream: bytes | None = None, wire: str = "host",
-                      pipeline=None, per_stage: bool = False):
+                      pipeline=None, per_stage: bool = False,
+                      pred_shape=None):
     """Compression ratio of x under cfg.
 
     wire='host'   — this module's zlib byte stream (archival coder).
@@ -164,6 +165,9 @@ def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
     per_stage     — with a device wire, report [(stage_spec, ratio)] per
                     chain prefix instead of one number (Pipeline
                     .stage_report), so any chain's ratio decomposes.
+    pred_shape    — value-domain shape for pred-bearing chains (DESIGN.md
+                    §9); defaults to x.shape, so a 2-D array reaches
+                    `lorenzo` as its plane even though the wire is flat.
     """
     if wire not in ("host", "device", "both"):
         raise ValueError(f"wire must be host|device|both, got {wire!r}")
@@ -176,12 +180,14 @@ def compression_ratio(x: np.ndarray, cfg: QuantizerConfig, level: int = 6,
         import jax.numpy as jnp                      # lazy: jax import
         pipe = _device_pipeline(cfg, pipeline)
         xj = jnp.asarray(x)
+        if pred_shape is None:
+            pred_shape = tuple(x.shape)
         if per_stage:
-            rows = pipe.stage_report(xj)
+            rows = pipe.stage_report(xj, pred_shape=pred_shape)
             device = [(label, x.nbytes * 8 / float(bits))
                       for label, bits in rows[1:]]
         else:
-            enc = pipe.encode(xj)
+            enc = pipe.encode(xj, pred_shape=pred_shape)
             device = x.nbytes / (float(pipe.wire_bits(enc, x.size)) / 8)
     if wire == "host":
         return host

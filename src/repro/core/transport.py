@@ -92,6 +92,11 @@ def _kv_wire_bytes(wire):
     n_pages = wire.payload_len.size
     static_bits = n_pages * sum(st.header_content_bits(cap)
                                 for st in wire.stages)
+    # per-page pred stages (§9) transmit their header content too — zero
+    # for the shipped static bijections, but the slot keeps this accessor
+    # bit-exact against Pipeline.wire_bits for any future predictor
+    static_bits += n_pages * sum(st.header_content_bits()
+                                 for st in getattr(wire, "pred", ()))
     static_bits += (wire.eb2.size * 32 + wire.out_idx.size * 32
                     + wire.out_val.size * 32 + wire.overflow.size * 8)
     if wire.stages and wire.stages[-1].transmits_len:
@@ -172,8 +177,13 @@ class Transport:
         way."""
         qc = pipe.qcfg()
         p = axis_size_static(axis)
+        # Pred chains never ring-reduce: the wire carries folded residual
+        # codes, and the delta of a sum is not the sum of the deltas once
+        # each shard folds independently — decode-then-sum is the only
+        # exact path (DESIGN.md §9), so they take the gather branch.
         ring_ok = (self.reduce == "auto" and qc.mode == "abs"
-                   and not pipe.stages and p is not None and p > 1
+                   and not pipe.stages and not pipe.pred
+                   and p is not None and p > 1
                    and p * qc.maxbin < (1 << 24))
         if not ring_ok:
             return self._gather_sum(enc, pipe, n, axis)

@@ -91,9 +91,13 @@ class PackedCache(NamedTuple):
 
 
 def pack_cache(cache: QuantCache, *, stages=()) -> PackedCache:
-    """QuantCache -> transfer wire.  `stages` is a word-stage chain spec
-    ("zero", "narrow", "shuffle|narrow", ...) applied per page — zero
-    chunks drop the unwritten tail of a mid-decode cache."""
+    """QuantCache -> transfer wire.  `stages` is a per-page chain spec in
+    the two-domain grammar: optional leading pred stages (DESIGN.md §9 —
+    "kvdelta|zero|narrow" runs the previous-token delta on each page's
+    bin plane before coding; the prediction is decode-side and page-local
+    so migrated pages stay bit-exact) then word stages ("zero", "narrow",
+    "shuffle|narrow", ...) — zero chunks drop the unwritten tail of a
+    mid-decode cache."""
     return PackedCache(KVC.pack_kv(cache.k, page=PAGE, stages=stages),
                        KVC.pack_kv(cache.v, page=PAGE, stages=stages),
                        cache.hot_k, cache.hot_v)

@@ -67,6 +67,30 @@ def test_design_documents_the_pipeline_api():
     assert "rel:1e-3|pack:8|zero|narrow" in sec7
 
 
+def test_design_documents_the_value_stage_contract():
+    """§9 is the value-domain (predictor) contract: every registered pred
+    stage must appear in DESIGN.md §9 (the registry row is part of adding
+    a predictor), along with the closed-loop invariant and the two-domain
+    grammar example, and §4/§6/§7 must cross-link to it — the bin-plane
+    bijection is what keeps the §1 bound intact ahead of the quantizer."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.predict import PRED_STAGES
+
+    _, text = _design_sections()
+    assert "## §9" in text
+    sec9 = text.split("## §9", 1)[1]
+    for name in PRED_STAGES:
+        assert f"`{name}`" in sec9, (
+            f"registered value stage {name!r} is undocumented in DESIGN.md §9")
+    assert "closed-loop" in sec9 or "closed loop" in sec9
+    assert "delta|abs:1e-3|pack:8|zero|narrow|ent" in sec9
+    # §4/§6/§7 each cross-link the value-domain section
+    for n in (4, 6, 7):
+        body = text.split(f"## §{n}", 1)[1].split(f"## §{n + 1}", 1)[0]
+        assert "§9" in body, f"DESIGN.md §{n} does not cross-link §9"
+
+
 def test_design_documents_the_transport_api():
     """§8 is the transport contract: every public Transport method must
     appear in DESIGN.md §8 (plus the module-level wire_bytes accessor and

@@ -46,6 +46,10 @@ def _mixed_sign_rel(n):
     "rel:0.001|pack:32|shuffle:32|narrow",
     "abs:0.001:cap=0.25:dtype=float64|pack:16|zero",
     "abs:0.001|pack:8|zero|narrow|ent",
+    "delta|abs:0.001|pack:16|narrow",
+    "lorenzo|abs:0.001|pack:32|narrow|ent",
+    "kvdelta|abs:0.001|pack:8|zero|narrow",
+    "delta|kvdelta|abs:0.001|pack:16",
 ])
 def test_spec_parse_print_roundtrip(spec):
     pipe = parse_pipeline(spec)
@@ -67,6 +71,8 @@ def test_bare_shuffle_inherits_pack_width():
     "zero|abs:0.001|pack:8", "abs:0.001|pack:8|shuffle:9",
     "abs:0.001|pack:8|zero:5", "abs:0.001|pack:8|ent:5",
     "abs:0.001|pack:8|ent:k=2",
+    "abs:0.001|delta|pack:8", "delta:3|abs:0.001|pack:8",
+    "delta|lorenzo",
 ])
 def test_spec_parse_rejects_malformed(bad):
     with pytest.raises((ValueError, KeyError)):
@@ -369,7 +375,8 @@ def test_compressed_shard_unifies_the_fork():
 
 @pytest.mark.parametrize("spec", ["abs:1.0:cap=0.015625|pack:8|narrow",
                                   "abs:1.0:cap=0.015625|pack:8|shuffle|zero",
-                                  "abs:1.0:cap=0.015625|pack:8|narrow|ent"])
+                                  "abs:1.0:cap=0.015625|pack:8|narrow|ent",
+                                  "delta|abs:1.0:cap=0.015625|pack:8|narrow"])
 def test_compressed_mean_pipeline_transparent_under_shard_map(spec):
     """compressed_mean through ANY pipeline must produce the same mean
     and residual bits as the stage-free wire (stages are exact), under
@@ -411,7 +418,8 @@ def test_pack_kv_stage_chains_roundtrip():
     x[:, :, 160:, :] = 0.0
     q = quantize_kv(jnp.asarray(x), kv_quantizer_config())
     pk = pack_kv(q)
-    for stages in ("zero", "narrow", "shuffle|narrow", "narrow|ent"):
+    for stages in ("zero", "narrow", "shuffle|narrow", "narrow|ent",
+                   "kvdelta|zero|narrow", "kvdelta|narrow|ent"):
         p = pack_kv(q, stages=stages)
         back = unpack_kv(p)
         for a, b in zip(q, back):

@@ -1,0 +1,405 @@
+"""Closed-loop predictor stages (DESIGN.md §9): the value-domain half of
+the two-domain pipeline grammar.
+
+The §1 guarantee proof strategy: the pred stages are exact integer
+bijections on the quantized bin plane, so a pred chain's decode must be
+BIT-IDENTICAL to its pred-free twin — every bound/special-value property
+already proven for the twin is inherited, and any single differing bit
+is a regression.  On top of that:
+
+  * the vectorized stages are pinned bit-identical to `scan_reference`,
+    the literal per-element reconstruction-feedback loop the paper
+    describes (predict from the decoder's view, feed the decoded
+    residual back) — recon == bins IS closed-loop exactness;
+  * an OPEN-loop delta (predict from the raw input) demonstrably breaks
+    the bound on a drifting ramp — the regression the paper's lesson
+    warns about;
+  * a hypothesis property runs every predictor x ABS/REL x f32/f64 over
+    awkward shapes (n=1, single-row/column planes, batched 3-D);
+  * wire accounting: pred stages ship zero header bits, and
+    `wire_bits`/`stage_report`/KV `wire_bytes` agree exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GRAMMAR, QuantizerConfig, codec, oracle_np as onp
+from repro.core import predict as P
+from repro.core.pipeline import parse_pipeline
+from repro.core.quantizer import (dequantize_abs, dequantize_rel,
+                                  quantize_abs, quantize_rel)
+
+RNG = np.random.default_rng(97)
+
+PRED_SPECS = ["delta", "lorenzo", "kvdelta"]
+
+
+def _mix(n):
+    x = (RNG.standard_normal(n) * 3e-3).astype(np.float32)
+    x[RNG.random(n) < 0.5] = 0.0
+    if n >= 8:
+        x[:8] = [np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-42,
+                 np.finfo(np.float32).max, 5e-4]
+    return x
+
+
+def _smooth_plane(rows, cols, scale=1.0):
+    y, x = np.mgrid[0:rows, 0:cols]
+    f = np.sin(x / 9.0) * np.cos(y / 7.0) + 0.03 * RNG.standard_normal(
+        (rows, cols))
+    return (scale * f).astype(np.float32)
+
+
+# ----------------------------------------- bit-identity to pred-free twin --
+
+@pytest.mark.parametrize("pred", PRED_SPECS)
+@pytest.mark.parametrize("tail", ["", "|zero", "|narrow", "|narrow|ent"])
+def test_pred_decode_bit_identical_to_pred_free_twin(pred, tail):
+    """The §9 invariant: inserting any pred stage changes the wire, never
+    the decoded bits — so every §1 property of the twin is inherited."""
+    n = 40_000
+    x = jnp.asarray(_mix(n))
+    base = f"abs:0.001|pack:16{tail}"
+    twin = parse_pipeline(base)
+    pipe = parse_pipeline(f"{pred}|{base}")
+    y0 = np.asarray(twin.decode(twin.encode(x, kernels=False), n=n,
+                                kernels=False))
+    y1 = np.asarray(pipe.decode(pipe.encode(x, kernels=False), n=n,
+                                kernels=False))
+    np.testing.assert_array_equal(y0.view(np.uint32), y1.view(np.uint32))
+
+
+def test_pred_stages_compose_and_roundtrip():
+    """Two pred stages chain in spec order and invert in reverse order."""
+    n = 12_000
+    x = jnp.asarray(_mix(n))
+    pipe = parse_pipeline("delta|kvdelta|abs:0.001|pack:16|narrow")
+    assert [p.spec() for p in pipe.pred] == ["delta", "kvdelta"]
+    assert parse_pipeline(pipe.spec()) == pipe
+    twin = parse_pipeline("abs:0.001|pack:16|narrow")
+    y0 = np.asarray(twin.decode(twin.encode(x, kernels=False), n=n,
+                                kernels=False))
+    y1 = np.asarray(pipe.decode(pipe.encode(x, kernels=False), n=n,
+                                kernels=False))
+    np.testing.assert_array_equal(y0.view(np.uint32), y1.view(np.uint32))
+
+
+def test_pred_chain_matches_numpy_oracle():
+    """§1 proof via the host oracle: the decoded stream of a pred chain
+    equals the numpy quantizer's reconstruction on non-outliers and the
+    bound holds on every finite element."""
+    n = 30_000
+    x = _mix(n)
+    pipe = parse_pipeline("delta|abs:0.001|pack:16|narrow")
+    bins, outlier, recon = onp.quantize_abs(x, pipe.qcfg())
+    y = np.asarray(pipe.roundtrip(jnp.asarray(x), kernels=False))
+    fin = np.isfinite(x)
+    keep = fin & ~outlier
+    np.testing.assert_array_equal(
+        y[keep].view(np.uint32),
+        recon[keep].astype(np.float32).view(np.uint32))
+    assert np.abs(x[fin].astype(np.float64) - y[fin]).max() <= 1e-3
+    np.testing.assert_array_equal(x[~fin].view(np.uint32),
+                                  y[~fin].view(np.uint32))
+
+
+# --------------------------------------------- scan-reference bit parity ---
+
+@pytest.mark.parametrize("shape", [(31,), (1,), (7, 9), (1, 13), (13, 1),
+                                   (3, 5, 8)])
+@pytest.mark.parametrize("bits", [8, 16, 32])
+@pytest.mark.parametrize("pred", PRED_SPECS)
+def test_vectorized_stage_matches_reconstruction_feedback_scan(
+        pred, bits, shape):
+    """The vectorized bin-domain stages must be bit-identical to the
+    literal per-element closed-loop scan, and the scan's running
+    reconstruction must equal the true bins (closed-loop exactness)."""
+    (stage,) = P.parse_pred_stages(pred)
+    n = int(np.prod(shape))
+    maxbin = (1 << (bits - 1)) - 1 if bits < 32 else (1 << 23)
+    bins = jnp.asarray(RNG.integers(-maxbin, maxbin + 1, n, dtype=np.int64),
+                       jnp.int32)
+    codes = np.asarray(stage.encode_bins(bins, shape, bits))
+    ref_codes, ref_recon = P.scan_reference(stage, np.asarray(bins), shape,
+                                            bits)
+    np.testing.assert_array_equal(codes, ref_codes)
+    np.testing.assert_array_equal(ref_recon, np.asarray(bins))
+    back = np.asarray(stage.decode_bins(jnp.asarray(codes), shape, bits))
+    np.testing.assert_array_equal(back, np.asarray(bins))
+
+
+def test_fold_unfold_is_a_bijection_at_every_width():
+    for bits in (8, 16, 32):
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        span = np.arange(lo, hi + 1, dtype=np.int64) if bits == 8 else \
+            RNG.integers(lo, hi + 1, 4096, dtype=np.int64)
+        d = jnp.asarray(span, jnp.int32)
+        z = P._fold(d, bits)
+        np.testing.assert_array_equal(np.asarray(P._unfold(z, bits)),
+                                      np.asarray(d))
+
+
+# ------------------------------------------------- open-loop regression ----
+
+def test_open_loop_delta_violates_bound_on_drifting_ramp():
+    """The paper's central lesson, as a failing construction: predict
+    from the RAW previous value and each per-step residual quantizes to
+    zero on a slow ramp — the reconstruction never moves while the input
+    drifts without bound.  The closed-loop chain on the same input holds
+    the bound exactly."""
+    eb = 1e-3
+    n = 4096
+    x = (np.arange(n, dtype=np.float64) * 0.9 * eb).astype(np.float32)
+
+    # open loop: residual vs the raw neighbour, quantized independently
+    d = np.diff(x.astype(np.float64), prepend=0.0)
+    bins = np.rint(d / (2 * eb))
+    y_open = np.cumsum(bins * 2 * eb)
+    assert np.abs(x.astype(np.float64) - y_open).max() > 100 * eb
+
+    # closed loop (§9): the same data through the delta chain holds §1
+    pipe = parse_pipeline(f"delta|abs:{eb!r}|pack:16")
+    y = np.asarray(pipe.roundtrip(jnp.asarray(x), kernels=False))
+    assert np.abs(x.astype(np.float64) - y).max() <= eb
+
+
+# ------------------------------------------------------ hypothesis sweep ---
+
+SHAPES = [(1,), (7,), (97,), (1, 9), (9, 1), (8, 16), (2, 5, 6)]
+
+
+def _roundtrip_holds(pred, mode, dtype, eb, x):
+    """One closed-loop roundtrip check, shared by the hypothesis property
+    and the deterministic sweep.  float32 runs the full packed pipeline;
+    float64 runs the value-domain path (quantize -> pred bijection ->
+    pack/unpack words -> inverse -> dequantize) because the packed wire's
+    exact-outlier payload is a uint32 plane (f32-only) — the pred stages
+    themselves are dtype-blind bin bijections either way."""
+    shape, n = x.shape, x.size
+    xf = x.astype(np.float64).reshape(-1)
+    if dtype == "float32":
+        spec = f"{pred}|{mode}:{eb!r}|pack:16"
+        pipe = parse_pipeline(spec)
+        y = np.asarray(pipe.roundtrip(jnp.asarray(x), kernels=False))
+        twin = parse_pipeline(f"{mode}:{eb!r}|pack:16")
+        y0 = np.asarray(twin.roundtrip(jnp.asarray(x), kernels=False))
+        np.testing.assert_array_equal(y.view(np.uint32), y0.view(np.uint32))
+        yf = y.astype(np.float64).reshape(-1)
+        fin = np.isfinite(xf)
+    else:
+        cfg = QuantizerConfig(mode=mode, error_bound=eb, bin_bits=16,
+                              dtype=dtype)
+        q = (quantize_abs if mode == "abs" else quantize_rel)(
+            jnp.asarray(x.reshape(-1)), cfg)
+        stages = P.parse_pred_stages(pred)
+        codes = P.encode_pred_stages(stages, q.bins, shape, 16)
+        words = codec.pack_words(codes, 16)
+        back = P.decode_pred_stages(stages,
+                                    codec.unpack_words(words, n, 16),
+                                    shape, 16)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q.bins))
+        if mode == "abs":
+            y = dequantize_abs(back, cfg)
+        else:
+            y = dequantize_rel(back, q.sign, cfg)
+        yf = np.asarray(y, np.float64).reshape(-1)
+        fin = ~np.asarray(q.outlier).reshape(-1)   # outliers ride separately
+    if mode == "abs":
+        assert np.abs(xf[fin] - yf[fin]).max() <= eb
+    else:
+        assert np.abs((xf[fin] - yf[fin]) / xf[fin]).max() <= eb
+
+
+def test_closed_loop_roundtrip_property():
+    pytest.importorskip("hypothesis")   # optional dev dep
+    from hypothesis import given, settings, strategies as st
+
+    x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        @settings(max_examples=120, deadline=None)
+        @given(st.data())
+        def run(data):
+            pred = data.draw(st.sampled_from(PRED_SPECS))
+            mode = data.draw(st.sampled_from(["abs", "rel"]))
+            dtype = data.draw(st.sampled_from(["float32", "float64"]))
+            shape = data.draw(st.sampled_from(SHAPES))
+            eb = data.draw(st.sampled_from([1e-3, 1e-2]))
+            n = int(np.prod(shape))
+            vals = data.draw(st.lists(
+                st.floats(-1e3, 1e3, allow_nan=False, allow_infinity=False,
+                          width=32), min_size=n, max_size=n))
+            x = np.asarray(vals, dtype).reshape(shape)
+            if mode == "rel":            # REL bound is undefined at 0
+                x = np.where(np.abs(x) < 1e-6, 1e-6, x).astype(dtype)
+            _roundtrip_holds(pred, mode, dtype, eb, x)
+
+        run()
+    finally:
+        jax.config.update("jax_enable_x64", x64)
+
+
+@pytest.mark.parametrize("pred", PRED_SPECS)
+@pytest.mark.parametrize("mode", ["abs", "rel"])
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_closed_loop_roundtrip_deterministic_sweep(pred, mode, dtype):
+    """Deterministic twin of the hypothesis property (hypothesis is an
+    optional dev dep): every predictor x ABS/REL x f32/f64 over the
+    awkward shapes, bound + bit-identity to the pred-free twin."""
+    x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        eb = 1e-3
+        for shape in SHAPES:
+            n = int(np.prod(shape))
+            x = (RNG.standard_normal(n) * 2.0).astype(dtype).reshape(shape)
+            if mode == "rel":            # REL bound is undefined at 0
+                x = np.where(np.abs(x) < 1e-6, 1e-6, x).astype(dtype)
+            _roundtrip_holds(pred, mode, dtype, eb, x)
+    finally:
+        jax.config.update("jax_enable_x64", x64)
+
+
+# --------------------------------------------------- dispatch + jit/shmap --
+
+def test_pred_chain_dispatches_to_jit_reference():
+    """kernel_dispatch must return None for pred chains (the §7 table's
+    open slot) and the kernels=True path must fall back bit-identically."""
+    pipe = parse_pipeline("delta|abs:0.01|pack:16|narrow")
+    assert pipe.kernel_dispatch() is None
+    x = jnp.asarray(_mix(30_000))
+    a = pipe.encode(x, kernels=False)
+    b = pipe.encode(x, kernels=True, interpret=True)   # falls back
+    np.testing.assert_array_equal(np.asarray(a.payload),
+                                  np.asarray(b.payload))
+    ya = pipe.decode(a, n=x.size, kernels=False)
+    yb = pipe.decode(b, n=x.size, kernels=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ya).view(np.uint32),
+                                  np.asarray(yb).view(np.uint32))
+
+
+def test_pred_chain_under_jit_holds_bound():
+    n = 1 << 14
+    x = _smooth_plane(128, 128, scale=0.5).reshape(-1)[:n]
+    pipe = parse_pipeline("delta|abs:0.001|pack:16|narrow")
+    f = jax.jit(lambda v: pipe.decode(pipe.encode(v, kernels=False), n=n,
+                                      kernels=False))
+    y = np.asarray(f(jnp.asarray(x)))
+    assert np.abs(x.astype(np.float64) - y).max() <= 1e-3
+
+
+def test_lorenzo_pred_shape_threads_through_encode_decode():
+    """A 2-D tensor's plane structure must reach the stage whether the
+    stream arrives 2-D (shape default) or flat (explicit pred_shape) —
+    and both must decode to the same bits."""
+    x2 = _smooth_plane(64, 96)
+    pipe = parse_pipeline("lorenzo|abs:0.001|pack:16|narrow")
+    enc2 = pipe.encode(jnp.asarray(x2), kernels=False)
+    encf = pipe.encode(jnp.asarray(x2.reshape(-1)), kernels=False,
+                       pred_shape=x2.shape)
+    np.testing.assert_array_equal(np.asarray(enc2.payload),
+                                  np.asarray(encf.payload))
+    y = np.asarray(pipe.decode(enc2, shape=x2.shape, kernels=False))
+    assert np.abs(x2.astype(np.float64) - y).max() <= 1e-3
+    # a mismatched pred_shape must fail loudly, not mis-predict silently
+    with pytest.raises(ValueError, match="pred_shape"):
+        pipe.encode(jnp.asarray(x2), pred_shape=(7, 5), kernels=False)
+
+
+def test_lorenzo_beats_plain_chain_on_smooth_plane():
+    """The stage's reason to exist: on a smooth 2-D plane the folded
+    Lorenzo residuals are far narrower than the raw bins."""
+    x2 = jnp.asarray(_smooth_plane(256, 256))
+    plain = parse_pipeline("abs:0.0001|pack:32|narrow|ent")
+    lor = parse_pipeline("lorenzo|abs:0.0001|pack:32|narrow|ent")
+    b0 = float(plain.wire_bits(plain.encode(x2, kernels=False), x2.size))
+    b1 = float(lor.wire_bits(lor.encode(x2, kernels=False), x2.size))
+    assert b1 < 0.75 * b0, (b0, b1)
+
+
+# ----------------------------------------------------------- error paths ---
+
+@pytest.mark.parametrize("bad", ["abs:0.001|pack:8|wavelet",
+                                 "wavelet|abs:0.001|pack:8"])
+def test_unknown_stage_error_names_both_domains_and_grammar(bad):
+    """The parse error must teach the grammar: sorted registered names
+    from BOTH domains plus the two-domain grammar string."""
+    with pytest.raises(ValueError) as ei:
+        parse_pipeline(bad)
+    msg = str(ei.value)
+    for name in ("delta", "kvdelta", "lorenzo",        # value domain
+                 "ent", "narrow", "shuffle", "zero",   # word domain
+                 "abs", "noa", "rel"):                 # quantizers
+        assert name in msg, (name, msg)
+    assert GRAMMAR in msg
+
+
+def test_pred_stage_rejects_parameters():
+    with pytest.raises(ValueError, match="takes no parameters"):
+        parse_pipeline("delta:3|abs:0.001|pack:8")
+
+
+def test_pred_stage_after_quantizer_is_rejected():
+    with pytest.raises(ValueError):
+        parse_pipeline("abs:0.001|delta|pack:8")
+
+
+def test_register_pred_stage_extends_the_grammar():
+    name = "_testpred"
+    assert name not in P.PRED_STAGES
+    P.register_pred_stage(name,
+                          lambda nm, toks: P._parse_plain(nm, toks,
+                                                          P.DeltaStage))
+    try:
+        pipe = parse_pipeline(f"{name}|abs:0.001|pack:16")
+        assert pipe.pred == (P.DeltaStage(),)
+    finally:
+        del P.PRED_STAGES[name]
+
+
+# ------------------------------------------------------- wire accounting ---
+
+def test_pred_wire_accounting_is_bit_exact():
+    """Pred stages ship ZERO header bits: wire_bits must equal the
+    manual payload+header+table sum (the §9 accounting slot contributes
+    its explicit 0), and stage_report's base row carries the pred specs."""
+    n = 1 << 16
+    x = np.zeros(n, np.float32)
+    x[: n // 16] = RNG.standard_normal(n // 16).astype(np.float32) * 3e-3
+    pipe = parse_pipeline("delta|abs:0.001|pack:16|narrow|ent")
+    enc = pipe.encode(jnp.asarray(x), kernels=False)
+    sizes = pipe.stage_sizes(n)
+    hdr = sum(st.header_content_bits(sz)
+              for st, sz in zip(pipe.stages, sizes[:-1]))
+    hdr += sum(st.header_content_bits() for st in pipe.pred)   # == +0
+    base = 64 + enc.out_idx.shape[0] * 64
+    want = 32 * int(enc.payload_len) + hdr + 32 + base
+    assert float(pipe.wire_bits(enc, n)) == want
+
+    rows = pipe.stage_report(jnp.asarray(x))
+    assert rows[1][0] == "delta|abs:0.001|pack:16"
+    assert float(rows[-1][1]) == want
+
+    # a static pred chain accounts identically to its pred-free twin
+    twin = parse_pipeline("abs:0.001|pack:16")
+    ppipe = parse_pipeline("delta|abs:0.001|pack:16")
+    e0 = twin.encode(jnp.asarray(x), kernels=False)
+    e1 = ppipe.encode(jnp.asarray(x), kernels=False)
+    assert float(twin.wire_bits(e0, n)) == float(ppipe.wire_bits(e1, n))
+
+
+def test_compression_ratio_threads_pred_shape():
+    from repro.core import QuantizerConfig, compression_ratio
+    x2 = _smooth_plane(128, 128)
+    cfg = QuantizerConfig(mode="abs", error_bound=1e-4, bin_bits=32)
+    plain = compression_ratio(x2, cfg, wire="device",
+                              pipeline="abs:0.0001|pack:32|narrow|ent")
+    lor = compression_ratio(x2, cfg, wire="device",
+                            pipeline="lorenzo|abs:0.0001|pack:32|narrow|ent")
+    assert lor > plain
+    rows = compression_ratio(
+        x2, cfg, wire="device",
+        pipeline="lorenzo|abs:0.0001|pack:32|narrow", per_stage=True)
+    assert rows[0][0] == "lorenzo|abs:0.0001|pack:32"

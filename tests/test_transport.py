@@ -112,8 +112,11 @@ def test_reduce_mean_matches_pre_refactor_path_on_presets(preset):
     np.testing.assert_array_equal(np.asarray(mean).view(np.uint32),
                                   np.asarray(ref).view(np.uint32))
 
-    # reference 2 (ABS chains): the frozen legacy collective path
-    if pipe.quant.mode == "abs":
+    # reference 2 (ABS chains): the frozen legacy collective path — it
+    # predates the value domain (§9), so pred-bearing presets pin against
+    # reference 1 only: the legacy decoder would read folded residual
+    # codes as raw bins
+    if pipe.quant.mode == "abs" and not pipe.pred:
         def run_legacy(v):
             e = pipe.encode(v, eb=eb_of(v), kernels=False)
             return _legacy_gather_sum(e, pipe, n, "pod") / jax.lax.psum(
@@ -268,6 +271,83 @@ def test_packed_domain_ring_bit_identical_multipod():
         assert marker in r.stdout, (marker, r.stdout, r.stderr)
 
 
+TRANSFER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compression.kv import (kv_error_bound_holds,
+                                      kv_quantizer_config, quantize_kv)
+    from repro.models import serve
+
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = jax.make_mesh((2,), ("pod",))
+
+    if hasattr(jax, "shard_map"):
+        def smap(f, in_specs, out_specs):
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, axis_names={"pod"},
+                                 check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def smap(f, in_specs, out_specs):
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+    rng = np.random.default_rng(11)
+    # token-correlated cache so the kvdelta residuals are genuinely small
+    x = np.cumsum(rng.standard_normal((2, 1, 2, 256, 64)), axis=3)
+    x = (x * 0.05).astype(np.float32)
+    x[:, :, :, 160:, :] = 0.0                      # unwritten tail pages
+    kv_cfg = kv_quantizer_config()
+    qk = quantize_kv(jnp.asarray(x), kv_cfg)
+    qv = quantize_kv(jnp.asarray(x * 0.5), kv_cfg)
+    hot = jnp.zeros((2, 1, serve.PAGE, 2, 64), jnp.float32)
+    cache = serve.QuantCache(qk, qv, hot, hot)
+    leaves, treedef = jax.tree.flatten(cache)
+
+    for st in ("kvdelta|zero|narrow", "kvdelta|narrow|ent"):
+        def send(c, st=st):
+            moved = serve.transfer_cache(c, 0, 1, "pod", stages=st)
+            return tuple(jnp.expand_dims(l, 0)
+                         for l in jax.tree.leaves(moved))
+
+        out = jax.jit(smap(send, P(), (P("pod"),) * len(leaves)))(cache)
+        # rank 1 received the cache bit-identically; rank 0 holds zeros
+        for a, b in zip(leaves, out):
+            got = np.asarray(b)
+            assert np.array_equal(np.asarray(a), got[1]), st
+            assert not got[0].any(), st
+        recv = jax.tree.unflatten(treedef,
+                                  [jnp.asarray(np.asarray(b)[1])
+                                   for b in out])
+        assert bool(kv_error_bound_holds(jnp.asarray(x), recv.k, kv_cfg))
+        print("TRANSFER_OK", st)
+""")
+
+
+@pytest.mark.slow
+def test_transfer_cache_kvdelta_bit_exact_across_two_devices():
+    """Prefill→decode migration on a REAL 2-device mesh: the kvdelta
+    page chains cross via Transport.send_pages and arrive bit-exact on
+    the receiving device (decode-side, page-local prediction — §9)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", TRANSFER_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    for st in ("kvdelta|zero|narrow", "kvdelta|narrow|ent"):
+        assert f"TRANSFER_OK {st}" in r.stdout, (st, r.stdout, r.stderr)
+
+
 # -------------------------------------------- serve prefill→decode wire ---
 
 def _toy_cache(l_=2, b=2, g_=2, s=256, hd=64):
@@ -280,7 +360,9 @@ def _toy_cache(l_=2, b=2, g_=2, s=256, hd=64):
     return serve.QuantCache(qk, qv, hot, hot), x, kv_cfg
 
 
-@pytest.mark.parametrize("stages", ["", "zero", "shuffle|narrow"])
+@pytest.mark.parametrize("stages", ["", "zero", "shuffle|narrow",
+                                    "kvdelta|zero|narrow",
+                                    "kvdelta|narrow|ent"])
 def test_serve_transfer_cache_roundtrip_holds_bound(stages):
     """Prefill→decode disaggregation: the cache crosses the axis only as
     PackedKV wires via Transport.send_pages, arrives bit-identical, and
@@ -357,8 +439,11 @@ def test_kv_wire_bytes_equals_per_page_pipeline_accounting():
     table_bytes = (q.eb2.size * 4 + q.out_idx.size * 4
                    + q.out_val.size * 4 + q.overflow.size)
     none = jnp.zeros((0,), jnp.int32)
-    for stages in ("zero", "narrow", "shuffle|narrow", "narrow|ent"):
+    for stages in ("zero", "narrow", "shuffle|narrow", "narrow|ent",
+                   "kvdelta|narrow|ent"):
         pk = pack_kv(q, stages=stages)
+        # pred stages live in pk.pred and ship 0 header bits per page, so
+        # the word-stage Pipeline accounts the full wire
         pipe = Pipeline(QuantStage("abs", 1.0), PackStage(8), pk.stages)
         n_page = 128 * 64
         pages = pk.payload.reshape(-1, pk.payload.shape[-1])
