@@ -165,15 +165,36 @@ def markdown(rows):
     return "\n".join(out)
 
 
+def markdown_decode(rows):
+    """Measured serving rows from benchmarks/engine_bench.py
+    (BENCH_decode.json) — the empirical companion to the analytic
+    roofline: tokens/s and ms/step are wall-clock, wire/raw is the
+    per-slot PackedCache hand-off vs the raw-bf16 cache."""
+    out = ["| bench | arch | slots | seq | tok/s | ms/step | wire/raw |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['bench']} | {r['arch']} | {r['n_slots']} | {r['seq']} "
+            f"| {r['tokens_per_s']:.1f} | {r['ms_per_step']:.2f} | "
+            f"{r['wire_vs_raw']:.3f} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--decode-bench", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_decode.json"),
+        help="engine_bench artifact to append as a measured-decode table")
     args = ap.parse_args()
     rows = analyze(args.mesh)
     with open(os.path.join(RESULTS, f"roofline.{args.mesh}.json"),
               "w") as f:
         json.dump(rows, f, indent=1)
     print(markdown(rows))
+    if os.path.exists(args.decode_bench):
+        print()
+        print(markdown_decode(json.load(open(args.decode_bench))))
 
 
 if __name__ == "__main__":

@@ -302,6 +302,37 @@ def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
     return QuantizedKV(bins, p.eb2, p.out_idx, p.out_val, p.overflow)
 
 
+def slice_pages(q: QuantizedKV, start: int, count: int = 1, *,
+                page: int = 128) -> QuantizedKV:
+    """Whole-page slice [start, start+count) of a quantized cache — the
+    unit of streaming migration (DESIGN.md §10).  Every page is
+    self-describing (its own eb2 / outlier / overflow row), so a slice
+    packs to a standalone `PackedKV` wire with `pack_kv` and decodes
+    bit-exactly wherever `paste_pages` lands it."""
+    s0 = start * page
+    return QuantizedKV(
+        q.bins[..., s0:s0 + count * page, :],
+        q.eb2[..., start:start + count],
+        q.out_idx[..., start:start + count, :],
+        q.out_val[..., start:start + count, :],
+        q.overflow[..., start:start + count])
+
+
+def paste_pages(dst: QuantizedKV, src: QuantizedKV, start: int, *,
+                page: int = 128) -> QuantizedKV:
+    """Inverse of `slice_pages`: write a page slice into `dst` at page
+    index `start` (bit-exact — pages never split, DESIGN.md §10)."""
+    s0 = start * page
+    n = src.eb2.shape[-1]
+    assert src.bins.shape[-2] == n * page, (src.bins.shape, n, page)
+    return QuantizedKV(
+        dst.bins.at[..., s0:s0 + n * page, :].set(src.bins),
+        dst.eb2.at[..., start:start + n].set(src.eb2),
+        dst.out_idx.at[..., start:start + n, :].set(src.out_idx),
+        dst.out_val.at[..., start:start + n, :].set(src.out_val),
+        dst.overflow.at[..., start:start + n].set(src.overflow))
+
+
 def gather_kv_packed(p: PackedKV, axis: str) -> PackedKV:
     """All-gather a packed cache over a mesh axis (prefill->decode
     disaggregation: every decode host receives every prefill shard's pages

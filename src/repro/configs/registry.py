@@ -129,3 +129,30 @@ def get_pipeline(name: str) -> str:
         return name
     raise KeyError(f"unknown pipeline preset {name!r}; have "
                    f"{sorted(PIPELINES)} (or pass a '|'-spec)")
+
+
+# Per-page KV wire chains for the decode engine and cache migration
+# (DESIGN.md §10): fragments of the two-domain grammar applied per page —
+# optional §9 pred stages, then word stages.  These are NOT full pipeline
+# specs (the quantizer lives in kv_quantizer_config, per page); they feed
+# `pack_cache(..., stages=)` / `DecodeEngine(stages=)`.
+KV_PAGE_CHAINS = {
+    # default engine hand-off: drop the unwritten tail of mid-decode
+    # caches (zero chunks), nothing else on the latency path
+    "kv-page": "zero",
+    # narrow the surviving chunks too — smaller eviction/migration wires
+    "kv-page-narrow": "zero|narrow",
+    # §9 kvdelta residuals ahead of the per-page coder: correlated KV
+    # rows ship near-zero planes (the PR 6 transfer-proof chain)
+    "kv-page-pred": "kvdelta|zero|narrow",
+}
+
+
+def get_kv_chain(name: str) -> str:
+    """Resolve a KV page-chain preset OR pass through a raw fragment."""
+    if name in KV_PAGE_CHAINS:
+        return KV_PAGE_CHAINS[name]
+    if "|" in name or name in ("", "zero", "narrow"):
+        return name
+    raise KeyError(f"unknown KV page chain {name!r}; have "
+                   f"{sorted(KV_PAGE_CHAINS)} (or pass a stage fragment)")

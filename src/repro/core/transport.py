@@ -118,6 +118,8 @@ def wire_bytes(wire, *, pipe: Pipeline | None = None, n: int | None = None):
       * a PackedKV-shaped per-page wire: the per-page chunk accounting;
       * a NamedTuple of wires (e.g. `models.serve.PackedCache`): the sum
         of its fields;
+      * a list/tuple of wires (a streamed page sequence — the engine's
+        per-page migration ledger, DESIGN.md §10): the sum of its items;
       * a raw array: moves at full width (`size * itemsize`).
 
     Static int for static chains, traced scalar when a length-variable
@@ -130,7 +132,7 @@ def wire_bytes(wire, *, pipe: Pipeline | None = None, n: int | None = None):
         return wire.pipe.wire_bytes(wire.enc, wire.n if n is None else n)
     if hasattr(wire, "eb2") and hasattr(wire, "payload"):
         return _kv_wire_bytes(wire)
-    if hasattr(wire, "_fields"):
+    if hasattr(wire, "_fields") or isinstance(wire, (list, tuple)):
         total = 0
         for field in wire:
             total = total + wire_bytes(field)

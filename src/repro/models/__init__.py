@@ -1,3 +1,4 @@
 """Model zoo: dense/MoE/hybrid/SSM/enc-dec families behind one dispatcher
-(models.model.build)."""
+(models.model.build), plus the continuous-batching decode engine
+(models.engine, DESIGN.md §10)."""
 from .model import ModelBundle, build

@@ -119,6 +119,35 @@ def test_design_documents_the_transport_api():
         assert "§8" in body, f"DESIGN.md §{n} does not cross-link §8"
 
 
+def test_design_documents_the_engine():
+    """§10 is the decode-engine contract: the public slot-lifecycle API
+    must appear in DESIGN.md §10, along with the lifecycle verbs, the
+    streaming-migration overlap claim, and the bit-identity claim — and
+    §8/§9 must cross-link to it (the engine is the §8 transport's and the
+    §9 page chains' request-rate consumer), plus the README architecture
+    map must carry its row."""
+    _, text = _design_sections()
+    assert "## §10" in text
+    sec10 = text.split("## §10", 1)[1]
+    for name in ("allocate", "prefill", "insert", "generate_step",
+                 "evict", "stream_prefill", "PageWire", "PackedKV",
+                 "KV_PAGE_CHAINS"):
+        assert f"`{name}" in sec10, (
+            f"{name!r} is undocumented in DESIGN.md §10")
+    for verb in ("allocate", "fill", "close", "evict"):    # the lifecycle
+        assert verb in sec10, verb
+    assert "bit-identical" in sec10
+    assert "overlap" in sec10
+    assert "BENCH_decode.json" in sec10
+    # §8/§9 each cross-link the engine section
+    for n in (8, 9):
+        body = text.split(f"## §{n}", 1)[1].split(f"## §{n + 1}", 1)[0]
+        assert "§10" in body, f"DESIGN.md §{n} does not cross-link §10"
+    readme = (REPO / "README.md").read_text()
+    assert "models/engine.py" in readme
+    assert "§10" in readme
+
+
 def test_registry_pipeline_presets_parse():
     import sys
     sys.path.insert(0, str(REPO / "src"))

@@ -101,7 +101,84 @@ def test_spec_roundtrip_property():
     run()
 
 
-# ------------------------------------------- bit-identity vs the forks ----
+# ---------------------------------------- two-domain grammar fuzzer -------
+#
+# Random LEGAL chains from the full grammar {pred}|quant|pack|{word-stage}
+# must (1) parse<->print roundtrip, (2) decode bit-transparent vs the
+# stage-free quant|pack reference — every stage in BOTH domains is an
+# exact inverse — and (3) hold the §1 bound.  Word stages are drawn as
+# subsequences of the canonical order; every subset is legal (verified
+# exhaustively by the deterministic twin's superset sweep).
+
+PRED_NAMES = ["delta", "lorenzo", "kvdelta"]
+WORD_ORDER = ["shuffle", "zero", "narrow", "ent"]
+
+
+def _grammar_chain_is_transparent(preds, mode, eb, bits, words, x):
+    """One fuzzer case, shared with the deterministic twin."""
+    n = x.size
+    base = f"{mode}:{eb!r}|pack:{bits}"
+    spec = "".join(p + "|" for p in preds) + base \
+        + "".join("|" + w for w in words)
+    pipe = parse_pipeline(spec)
+    assert parse_pipeline(pipe.spec()) == pipe
+    assert parse_pipeline(pipe.spec()).spec() == pipe.spec()
+    ref = parse_pipeline(base)
+    xj = jnp.asarray(x)
+    y0 = np.asarray(ref.decode(ref.encode(xj, kernels=False), n=n,
+                               kernels=False))
+    y = np.asarray(pipe.decode(pipe.encode(xj, kernels=False), n=n,
+                               kernels=False))
+    np.testing.assert_array_equal(y.view(np.uint32), y0.view(np.uint32),
+                                  err_msg=spec)
+    fin = np.isfinite(x)
+    np.testing.assert_array_equal(x[~fin].view(np.uint32),
+                                  y[~fin].view(np.uint32), err_msg=spec)
+    if mode == "abs":
+        assert np.abs(x[fin].astype(np.float64) - y[fin]).max() <= eb, spec
+    else:
+        m = fin & (x != 0)
+        assert np.abs((x[m].astype(np.float64) - y[m])
+                      / x[m].astype(np.float64)).max() <= eb, spec
+
+
+def test_two_domain_grammar_fuzzer():
+    pytest.importorskip("hypothesis")   # optional dev dep
+    from hypothesis import given, settings, strategies as st
+
+    n = 6000
+    x = _mix(n)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def run(data):
+        preds = data.draw(st.lists(st.sampled_from(PRED_NAMES),
+                                   max_size=2, unique=True))
+        mode = data.draw(st.sampled_from(["abs", "rel"]))
+        eb = data.draw(st.sampled_from([1e-3, 1e-2]))
+        bits = data.draw(st.sampled_from([8, 16, 32]))
+        words = [w for w in WORD_ORDER if data.draw(st.booleans())]
+        _grammar_chain_is_transparent(preds, mode, eb, bits, words, x)
+
+    run()
+
+
+@pytest.mark.parametrize("preds,words", [
+    ([], ["zero", "narrow"]),
+    ([], ["shuffle", "zero", "narrow", "ent"]),
+    (["delta"], []),
+    (["delta"], ["narrow", "ent"]),
+    (["lorenzo"], ["shuffle", "narrow"]),
+    (["kvdelta"], ["zero", "narrow", "ent"]),
+    (["delta", "kvdelta"], ["zero"]),
+    (["kvdelta", "lorenzo"], ["shuffle", "zero", "narrow", "ent"]),
+])
+def test_two_domain_grammar_deterministic_sweep(preds, words):
+    """Deterministic twin of the fuzzer (hypothesis is an optional dev
+    dep): representative chains over both domains, every check shared."""
+    x = _mix(6000)
+    for mode, bits in [("abs", 8), ("rel", 16)]:
+        _grammar_chain_is_transparent(preds, mode, 1e-3, bits, words, x)
 
 LEGACY_CHAINS = [(m, bb, st) for m in ("abs", "rel") for bb in (8, 16)
                  for st in (None, "zero", "narrow")]

@@ -262,6 +262,43 @@ def test_closed_loop_roundtrip_deterministic_sweep(pred, mode, dtype):
         jax.config.update("jax_enable_x64", x64)
 
 
+@pytest.mark.parametrize("pred", PRED_SPECS)
+def test_f64_value_domain_route_holds_sub_f32_bound(pred):
+    """Pin the f64 predictor route explicitly (the PR 6 gotcha: the packed
+    wire's exact-outlier payload is a uint32 plane, so full packed-Pipeline
+    roundtrips are f32-only — f64 streams take the value-domain path
+    quantize -> pred bijection -> pack_words -> inverse -> dequantize).
+    The bound here, 2**-30 on O(1) values, is STRICTLY below f32 spacing
+    at 1.0 (2**-23): only a genuinely 64-bit route can pass."""
+    eb = 2.0 ** -30
+    assert eb < np.spacing(np.float32(1.0))    # sub-f32-resolution bound
+    x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        n = 4096
+        x = (1.0 + RNG.random(n)).astype(np.float64)      # O(1), in [1, 2)
+        cfg = QuantizerConfig(mode="abs", error_bound=eb, bin_bits=32,
+                              dtype="float64")
+        q = quantize_abs(jnp.asarray(x), cfg)
+        assert not bool(np.asarray(q.outlier).any())
+        stages = P.parse_pred_stages(pred)
+        codes = P.encode_pred_stages(stages, q.bins, (n,), 32)
+        words = codec.pack_words(codes, 32)
+        back = P.decode_pred_stages(stages,
+                                    codec.unpack_words(words, n, 32),
+                                    (n,), 32)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q.bins))
+        y = np.asarray(dequantize_abs(back, cfg))
+        assert y.dtype == np.float64
+        assert np.abs(x - y).max() <= eb
+        # the same data through f32 cannot meet this bound — the route
+        # being tested is doing real 64-bit work, not riding f32 luck
+        assert np.abs(x - x.astype(np.float32).astype(np.float64)
+                      ).max() > eb
+    finally:
+        jax.config.update("jax_enable_x64", x64)
+
+
 # --------------------------------------------------- dispatch + jit/shmap --
 
 def test_pred_chain_dispatches_to_jit_reference():
