@@ -141,6 +141,18 @@ GRAD_SUITES = {
 }
 
 
+def iid(n: int = N):
+    """Adversarial iid noise: uniform values, no zeros, no neighbour
+    correlation — the suite where the §9 predictors mathematically
+    cannot win (delta residuals of white noise are a touch WIDER than
+    the raw bins) and the chunk coder finds no dead chunks to drop.
+    This is the selector's (DESIGN.md §11) "pred loses on iid" case:
+    the auto choice must land on the best plain chain, never the delta
+    one."""
+    r = _rng("iid")
+    return r.uniform(-1.0, 1.0, n).astype(np.float32)
+
+
 def nyx_plane(grid: int = 1024):
     """2-D smooth cosmology plane (NYX-like slice): a low-pass random
     field with NYX's lognormal amplitude character plus a small noise

@@ -5,9 +5,15 @@ Sweeps ALL 2^32 bit patterns in slabs through the ABS and REL roundtrip
 and verifies, in float64, that every decoded value is within the bound or
 bit-identical.  ~2^32 values x a few ebs is CPU-hours: `--slabs N` runs N
 random-offset slabs (default 64 x 2^20 ~= 67M values, a superset of every
-exponent class); `--full` runs the whole space.
+exponent class); `--full` runs the whole space; `--smoke` runs the CI
+subset (the exponent-boundary slabs plus a few random ones).
 
-    PYTHONPATH=src python -m benchmarks.exhaustive_sweep [--full]
+Slab selection shares `benchmarks.datasets`' crc32-seeded registry
+(seeds derive from zlib.crc32 of a name, never the salted built-in
+hash), so the checked subset reproduces across processes without
+pinning PYTHONHASHSEED — the same discipline as every suite generator.
+
+    PYTHONPATH=src python -m benchmarks.exhaustive_sweep [--full|--smoke]
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, roundtrip_dense
+
+from .datasets import _rng
 
 SLAB = 1 << 20
 
@@ -54,15 +62,20 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--slabs", type=int, default=64)
     ap.add_argument("--eb", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: the exponent-boundary slabs plus "
+                         "4 random ones (same flag grammar as run.py)")
     args = ap.parse_args()
 
     total_slabs = (1 << 32) // SLAB
     if args.full:
         starts = [i * SLAB for i in range(total_slabs)]
     else:
-        rng = np.random.default_rng(0)
-        starts = sorted(int(i) * SLAB for i in rng.choice(
-            total_slabs, size=args.slabs, replace=False))
+        n_slabs = 4 if args.smoke else args.slabs
+        # crc32-seeded like every datasets.py generator — the checked
+        # subset is identical in every process
+        starts = sorted(int(i) * SLAB for i in _rng("sweep").choice(
+            total_slabs, size=n_slabs, replace=False))
         # always include the exponent-boundary slabs
         starts = sorted(set(starts) | {0, 0x7F000000, 0x7F800000,
                                        0x80000000, 0xFF000000})

@@ -165,6 +165,22 @@ def markdown(rows):
     return "\n".join(out)
 
 
+def markdown_select(rows):
+    """Measured selector rows from benchmarks/autotune.py
+    (BENCH_select.json): per suite, the statistics-chosen chain vs the
+    true best candidate and the auto-vs-best ratio — the empirical
+    evidence that the §11 runtime scoring rule ranks correctly."""
+    out = ["| set | suite | chosen | best | auto x | best x | "
+           "auto/best |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['set']} | {r['suite']} | {r['chosen']} | {r['best']} "
+            f"| {r['auto_ratio']} | {r['best_ratio']} | "
+            f"{r['auto_vs_best']} |")
+    return "\n".join(out)
+
+
 def markdown_decode(rows):
     """Measured serving rows from benchmarks/engine_bench.py
     (BENCH_decode.json) — the empirical companion to the analytic
@@ -186,6 +202,9 @@ def main():
     ap.add_argument("--decode-bench", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_decode.json"),
         help="engine_bench artifact to append as a measured-decode table")
+    ap.add_argument("--select-bench", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_select.json"),
+        help="autotune artifact to append as a selector table (§11)")
     args = ap.parse_args()
     rows = analyze(args.mesh)
     with open(os.path.join(RESULTS, f"roofline.{args.mesh}.json"),
@@ -195,6 +214,9 @@ def main():
     if os.path.exists(args.decode_bench):
         print()
         print(markdown_decode(json.load(open(args.decode_bench))))
+    if os.path.exists(args.select_bench):
+        print()
+        print(markdown_select(json.load(open(args.select_bench))))
 
 
 if __name__ == "__main__":

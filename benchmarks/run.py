@@ -27,9 +27,10 @@ Usage: PYTHONPATH=src python -m benchmarks.run [names...]
            [--pipeline SPEC|PRESET] [--smoke]
 
 --pipeline benches an arbitrary pipeline chain (DESIGN.md §7 spec string
-like "rel:1e-3|pack:8|zero|narrow", or a configs.registry preset name)
-in the `lossless` table; --smoke shrinks the lossless and transfer
-tables' datasets/repeats for CI.
+like "rel:1e-3|pack:8|zero|narrow", a configs.registry preset name, or
+"auto" / "auto:SET" for the §11 adaptive selector — the chosen chain is
+reported per suite) in the `lossless` table; --smoke shrinks the
+lossless and transfer tables' datasets/repeats for CI.
 """
 from __future__ import annotations
 
@@ -333,15 +334,17 @@ def packedwire():
 def _bench_pipeline_chain(spec: str, smoke: bool):
     """Bench one arbitrary pipeline chain (--pipeline): transmitted-wire
     ratio vs the packed-only prefix and vs f32, on the gradient suites
-    plus the mixed-sign REL suite."""
-    from repro.core import parse_pipeline
-
+    plus the `iid` noise suite and the mixed-sign REL suite.  'auto' /
+    'auto:SET' specs (DESIGN.md §11) run the adaptive selector — the
+    per-suite chosen chain is emitted alongside the ratios."""
+    from repro.core import select as SEL
     from repro.core.pipeline import Pipeline
 
-    pipe = parse_pipeline(spec)
+    pipe = SEL.parse_chain(spec)
     pk_pipe = Pipeline(pipe.quant, pipe.pack)      # packed-only prefix
     cut = 1 << 18 if smoke else None
-    suites = dict(datasets.GRAD_SUITES, relmix=datasets.rel_mixed)
+    suites = dict(datasets.GRAD_SUITES, iid=datasets.iid,
+                  relmix=datasets.rel_mixed)
     for name, gen in suites.items():
         x = jnp.asarray(gen()[:cut])
         f = jax.jit(lambda v: pipe.encode(v))
@@ -349,11 +352,15 @@ def _bench_pipeline_chain(spec: str, smoke: bool):
         t = _time(f, x, repeats=1 if smoke else 5)
         bits = float(pipe.wire_bits(enc, x.size))
         pk_bits = pk_pipe.wire_bits(pk_pipe.encode(x, kernels=False), x.size)
+        chosen = ""
+        if isinstance(pipe, SEL.Selector):
+            chosen = f"chosen={pipe.chains[int(enc.chain_id)].spec()} "
         # honest accounting: overflow means the capped table could NOT
         # absorb the outliers — the bound is not met and a real caller
         # must take the lossless fallback; a ratio alone would hide that
         _emit(f"lossless.pipeline.{name}", t * 1e6,
-              f"spec={pipe.spec()} vs_packed={pk_bits / bits:.2f}x "
+              f"spec={pipe.spec()} {chosen}"
+              f"vs_packed={pk_bits / bits:.2f}x "
               f"vs_f32={x.size * 32 / bits:.2f}x "
               f"overflow={bool(enc.overflow)} "
               f"outliers={float(enc.n_outliers) / x.size:.3f}")
@@ -592,10 +599,13 @@ def main(argv=None) -> None:
     pipeline = args.pipeline
     if pipeline is not None:
         from repro.configs.registry import get_pipeline
-        try:
-            pipeline = get_pipeline(pipeline)
-        except KeyError as e:
-            ap.error(str(e))
+        if pipeline == "auto" or pipeline.startswith("auto:"):
+            pass              # §11 selector spec — resolved by the bench
+        else:
+            try:
+                pipeline = get_pipeline(pipeline)
+            except KeyError as e:
+                ap.error(str(e))
         if args.names and args.names != ["lossless"]:
             ap.error("--pipeline applies to the `lossless` table only; "
                      f"drop {[n for n in args.names if n != 'lossless']} "

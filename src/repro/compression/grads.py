@@ -49,6 +49,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import select as SEL
 from repro.core.pipeline import (Encoded, Pipeline, PackStage, QuantStage,
                                  parse_pipeline)
 from repro.core.transport import TRANSPORT, Transport, wire_bytes as _wire_bytes
@@ -70,13 +71,34 @@ class GradCompressionConfig(NamedTuple):
     #                                 wires never ring-reduce, so
     #                                 reduce_sum takes the
     #                                 gather+dequantize branch (§8).
+    #                                 'auto' / 'auto:SET' (DESIGN.md §11)
+    #                                 resolves to a Selector: the chain
+    #                                 is chosen PER SHARD at encode time
+    #                                 from the set's candidates; selector
+    #                                 wires also always gather.
 
-    def pipe(self) -> Pipeline:
-        """The compression pipeline this config describes.  `pipeline`
-        wins; otherwise a stage-free chain is built from eb_rel/bin_bits.
+    def pipe(self):
+        """The compression pipeline this config describes (`Pipeline`,
+        or a §11 `Selector` for 'auto' specs).  `pipeline` wins;
+        otherwise a stage-free chain is built from eb_rel/bin_bits.
         The quantizer must be ABS: the wire's per-tensor bound
         eb_rel * rms(g) is an ABS bound, and the transport's
         gather/dequant moves exactly the ABS planes (no sign plane)."""
+        if SEL.is_auto_spec(self.pipeline):
+            sel = SEL.parse_selector(self.pipeline)
+            if sel.quant.mode != "abs":
+                raise ValueError(
+                    f"the gradient wire needs an 'abs' quantizer stage; "
+                    f"selector set {sel.name!r} has {sel.quant.mode!r}")
+            from repro.configs.registry import SELECTOR_SETS
+            if "cap=" not in SELECTOR_SETS[sel.name]["base"]:
+                # like plain specs: a base silent about the outlier cap
+                # inherits this config's; an explicit cap= wins
+                sel = dataclasses.replace(sel, chains=tuple(
+                    dataclasses.replace(p, quant=dataclasses.replace(
+                        p.quant, cap=self.outlier_cap_frac))
+                    for p in sel.chains))
+            return sel
         if self.pipeline:
             pipe = parse_pipeline(self.pipeline)
             if pipe.quant.mode != "abs":

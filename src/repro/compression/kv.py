@@ -58,6 +58,7 @@ import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, codec
 from repro.core import predict as predict
+from repro.core import select as select_mod
 from repro.core.bitops import pow2_floor
 from repro.core.pipeline import parse_word_stages
 from repro.core.quantizer import quantize_abs
@@ -177,7 +178,8 @@ class PackedKV:
     `payload_len`."""
 
     def __init__(self, payload, payload_len, headers, eb2, out_idx,
-                 out_val, overflow, *, stages=(), pred=()):
+                 out_val, overflow, *, stages=(), pred=(), select=None,
+                 chain_id=None):
         self.payload = payload        # uint32 [..., n_pages, cap_words]
         self.payload_len = payload_len  # int32 [..., n_pages]
         self.headers = headers        # tuple of uint32 [..., n_pages, hw]
@@ -187,15 +189,24 @@ class PackedKV:
         self.overflow = overflow      # bool  [..., n_pages]
         self.stages = stages          # word-domain chain (per page)
         self.pred = pred              # value-domain chain (per page, §9)
+        self.select = select          # KVSelector for per-page choice (§11)
+        self.chain_id = chain_id      # int32 [..., n_pages] when selected
 
     def tree_flatten(self):
-        return ((self.payload, self.payload_len, self.headers, self.eb2,
-                 self.out_idx, self.out_val, self.overflow),
-                (self.stages, self.pred))
+        children = (self.payload, self.payload_len, self.headers, self.eb2,
+                    self.out_idx, self.out_val, self.overflow)
+        if self.select is not None:
+            children = children + (self.chain_id,)
+        return children, (self.stages, self.pred, self.select)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, stages=aux[0], pred=aux[1])
+        stages, pred, select = aux
+        chain_id = None
+        if select is not None:
+            *children, chain_id = children
+        return cls(*children, stages=stages, pred=pred, select=select,
+                   chain_id=chain_id)
 
     # --- legacy field views ------------------------------------------------
     @property
@@ -221,6 +232,8 @@ class PackedKV:
         b += sum(h.size for h in self.headers) * 4
         if self.stages:
             b += self.payload_len.size * 4
+        if self.select is not None:
+            b += self.payload_len.size * 4 + self.chain_id.size * 4
         return b
 
     def wire_nbytes(self):
@@ -242,9 +255,19 @@ def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
     on the receiving host.  Requires page*D % 512 == 0 (whole uint32
     tiles per page; page=128 needs D % 4 == 0), and each word stage must
     preserve the page word count (whole LC chunks per page — D % 16 == 0
-    at page=128 for zero/narrow) so pages stay self-describing."""
+    at page=128 for zero/narrow) so pages stay self-describing.
+
+    stages='auto' / 'auto:SET' (DESIGN.md §11) selects the fragment PER
+    PAGE from a registered `SELECTOR_SETS` candidate set at page close;
+    each page transmits a 1-byte chain id next to its length, so every
+    page remains independently migratable and self-describing."""
     from repro.core.pipeline import encode_word_stages, word_stage_sizes
 
+    if select_mod.is_auto_spec(stages) or isinstance(stages,
+                                                     select_mod.KVSelector):
+        sel = (stages if isinstance(stages, select_mod.KVSelector)
+               else select_mod.parse_kv_selector(stages))
+        return _pack_kv_select(q, sel, page=page)
     pred, st = _page_stages(stages)
     *lead, s, d = q.bins.shape
     n_pages = s // page
@@ -273,12 +296,58 @@ def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
                     q.out_idx, q.out_val, q.overflow, stages=st, pred=pred)
 
 
+def _pack_kv_select(q: QuantizedKV, sel, *, page: int = 128) -> PackedKV:
+    """Per-page adaptive packing (DESIGN.md §11): score each page's bin
+    plane with the §11 statistics, `lax.switch` into the chosen
+    fragment's own encoder, and transmit the chain id per page.  Every
+    fragment preserves the per-page word count (validated), so the wire
+    stays page-migratable like any static chain."""
+    *lead, s, d = q.bins.shape
+    n_pages = s // page
+    per = page * d
+    assert per % (4 * codec.PACK_LANES) == 0, (page, d)
+    wpp = per // 4
+    sel.validate_page(wpp)
+    hw = sel.header_capacity_words(wpp)
+    flat = q.bins.reshape(-1, per).astype(jnp.int32)
+    branches = [
+        (lambda b, i=i: sel.encode_page(i, b, (page, d), 8, wpp))
+        for i in range(len(sel.chains))]
+
+    def one(bins):
+        cid = sel.page_select(bins, (page, d), 8, wpp)
+        hdr, pay, plen = jax.lax.switch(cid, branches, bins)
+        return cid, hdr, pay, plen
+
+    cid, hdr, pay, plen = jax.vmap(one)(flat)
+    return PackedKV(pay.reshape(*lead, n_pages, wpp),
+                    plen.reshape(*lead, n_pages),
+                    (hdr.reshape(*lead, n_pages, hw),),
+                    q.eb2, q.out_idx, q.out_val, q.overflow,
+                    select=sel, chain_id=cid.reshape(*lead, n_pages))
+
+
 def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
     """Inverse of pack_kv (bit-exact for every stage chain): restore the
-    int8 decode layout."""
+    int8 decode layout.  Selected wires (§11) dispatch per page on the
+    transmitted chain id."""
     from repro.core.pipeline import decode_word_stages
 
     *lead, n_pages, wpp = p.payload.shape
+    if p.select is not None:
+        per = wpp * 4
+        d = per // page
+        sel = p.select
+        hdr = p.headers[0].reshape(-1, p.headers[0].shape[-1])
+        pay = p.payload.reshape(-1, wpp)
+        cid = p.chain_id.reshape(-1)
+        branches = [
+            (lambda h, w, i=i: sel.decode_page(i, h, w, (page, d), 8, wpp))
+            for i in range(len(sel.chains))]
+        bins = jax.vmap(
+            lambda c, h, w: jax.lax.switch(c, branches, h, w))(cid, hdr, pay)
+        bins = bins.astype(jnp.int8).reshape(*lead, n_pages * page, d)
+        return QuantizedKV(bins, p.eb2, p.out_idx, p.out_val, p.overflow)
     if p.stages:
         batch = p.payload.size // wpp
         hdrs = tuple(h.reshape(batch, h.shape[-1]) for h in p.headers)

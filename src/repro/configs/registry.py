@@ -149,10 +149,56 @@ KV_PAGE_CHAINS = {
 
 
 def get_kv_chain(name: str) -> str:
-    """Resolve a KV page-chain preset OR pass through a raw fragment."""
+    """Resolve a KV page-chain preset OR pass through a raw fragment.
+    'auto' / 'auto:SET' specs (DESIGN.md §11) pass through verbatim —
+    `compression/kv.py` resolves them to a per-page `KVSelector`."""
     if name in KV_PAGE_CHAINS:
         return KV_PAGE_CHAINS[name]
+    if name == "auto" or name.startswith("auto:"):
+        return name
     if "|" in name or name in ("", "zero", "narrow"):
         return name
     raise KeyError(f"unknown KV page chain {name!r}; have "
                    f"{sorted(KV_PAGE_CHAINS)} (or pass a stage fragment)")
+
+
+# ------------------------------------------------- selector preset sets ---
+#
+# Candidate sets for the adaptive chain selector (DESIGN.md §11).  Each
+# entry names a BASE quantizer+pack spec shared by every candidate and
+# the candidate stage fragments (optional §9 pred prefix + word stages);
+# `base: None` marks a KV page-fragment set (the quantizer lives in the
+# per-page KV bound — resolved by `core.select.get_kv_selector`).
+# `bias` is the autotuner's measured-vs-estimated calibration in bits
+# per 1024 words, one entry per candidate.
+#
+# Between the AUTOTUNED markers, the `bias` tuples are REWRITTEN by
+# `benchmarks/autotune.py --write` (measured-vs-estimated calibration);
+# edit chain membership freely, but bias values come from measurement.
+
+# --- AUTOTUNED BEGIN (benchmarks/autotune.py rewrites the bias values) ---
+SELECTOR_SETS = {
+    # gradient all-reduce wires: plain through pred+entropy — the eb is
+    # a placeholder like the grad-wire presets (grads.py overrides it
+    # with the traced per-tensor bound at encode time)
+    "grad-wire": {
+        "base": "abs:0.001:cap=0.015625|pack:16",
+        "chains": ("", "zero", "narrow", "narrow|ent",
+                   "delta|narrow|ent"),
+        "bias": (0, 0, 0, 24.119, 30.48),
+    },
+    # plane-structured scientific fields (the NYX-like plane bound the
+    # lossless bench uses); lorenzo needs a 2-D pred_shape to fire
+    "sci-plane": {
+        "base": "abs:64.0:cap=0.015625|pack:32",
+        "chains": ("", "narrow", "narrow|ent", "lorenzo|narrow|ent"),
+        "bias": (0, 0, 4.297, 8.176),
+    },
+    # per-page KV cache fragments (engine eviction / migration wires)
+    "kv-page": {
+        "base": None,
+        "chains": ("zero", "zero|narrow", "kvdelta|zero|narrow"),
+        "bias": (0, 0, 0),
+    },
+}
+# --- AUTOTUNED END ---

@@ -1,0 +1,619 @@
+"""Adaptive chain selection (DESIGN.md §11) — pick the encoding chain per
+shard/page at runtime from a small static candidate set.
+
+One fixed chain cannot win on every data shape (the paper's central
+lesson: LC is a framework of interchangeable stages precisely because
+smooth fields, sparse gradients, iid noise and KV pages want different
+coders).  This module makes the encoder's chain choice DATA-DEPENDENT
+while keeping every downstream contract intact:
+
+  * STATISTICS (`plane_stats`): one cheap pass over the packed word
+    plane the stages already touch — per-chunk maxima give the
+    zero-chunk fraction and the exact §6 zero/narrow payload sizes, and
+    the byte histogram of the narrowed survivors feeds the `ent`
+    Shannon estimate through the same `codec.ent_code_lengths` budget
+    scan the real coder uses.  Pred-vs-plain is decided from the same
+    statistics computed on the predictor's residual plane (first
+    differences for `delta` — the §9 fold is a bijection, so residual
+    energy shows up directly as narrower chunks).
+  * SCORING (`chain_cost`): estimated transmitted bits per candidate =
+    estimated payload bits (exact for plain/zero/narrow, Shannon
+    estimate for `ent`) + the chain's static header content
+    + `bias` * n_words/1024, argmin wins.  `bias` is the per-chain
+    calibration the offline autotuner (benchmarks/autotune.py) fits
+    from measured-vs-estimated bits and writes into
+    `configs.registry.SELECTOR_SETS`.
+  * DISPATCH: `Selector.encode` runs `lax.switch` over the pre-parsed
+    candidate `Pipeline`s — fully jit-compatible static dispatch; only
+    the selected branch executes, and that branch IS the candidate's
+    own `Pipeline.encode`, so the selected wire is bit-identical to
+    encoding with that chain directly.
+  * WIRE (`SelectedWire`): the chain id rides as a tiny transmitted
+    header (1 byte — §11 layout) so decode is self-describing; the
+    payload plane is padded to the max candidate capacity and every
+    per-stage header plane is flattened into one padded header plane so
+    the container is structurally uniform across branches (gathers and
+    vmaps stay shape-static).  `Selector.wire_bits` routes each
+    branch's accounting through `Pipeline.wire_bits` (+8 bits for the
+    chain id), and `transport.wire_bytes` dispatches on the wire form,
+    so reported and shipped bytes cannot drift.
+
+`Selector` duck-types the `Pipeline` surface the consumers use
+(`encode`/`decode`/`wire_bits`/`wire_bytes`/`qcfg`/`spec`), so
+`compression/grads.py` ships selector wires through the same
+`CompressedShard`/`Transport` path — always the §8 gather branch, like
+pred chains: the wire's meaning depends on a per-shard runtime choice,
+so decode-then-sum is the only exact reduction.  `KVSelector` is the
+per-page variant `compression/kv.py` dispatches at page close
+(`pack_kv(..., stages="auto")`, DESIGN.md §10 lifecycle step 3).
+
+Scoreability restriction: candidate word chains may contain only the
+chunk coder (`zero`/`narrow`) and `ent` — `shuffle` transforms the
+plane before chunking and is not predictable from the shared
+statistics, so it is rejected at set construction rather than silently
+mis-scored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import codec as C
+from . import predict as P
+from .pipeline import (ChunkStage, Encoded, EntStage, PackStage, Pipeline,
+                       QuantStage, encode_word_stages, decode_word_stages,
+                       parse_pipeline, parse_word_stages, word_stage_sizes)
+
+CHAIN_ID_BITS = 8          # the transmitted chain-id header (§11 layout)
+MAX_CHAINS = 1 << CHAIN_ID_BITS
+
+
+class SelectedWire(NamedTuple):
+    """The one wire container every selector produces — an `Encoded`
+    made structurally uniform across the candidate set so `lax.switch`
+    branches, gathers and vmaps stay shape-static:
+
+      * `chain_id` — int32 scalar, transmitted as a 1-byte header
+        (§11 layout): decode and accounting dispatch on it, so the wire
+        is self-describing;
+      * `payload` — the selected chain's final word plane, zero-padded
+        to the max capacity across the set;
+      * `header` — every per-stage header plane of the selected chain,
+        raveled in chain order and zero-padded to the max total header
+        words across the set (the receiver re-splits by the selected
+        chain's static layout);
+      * the rest is exactly the §4 outlier table / sign plane / bound —
+        identical across candidates because every chain in a set shares
+        the quantizer and pack stages.
+    """
+    chain_id: jnp.ndarray         # int32 scalar — transmitted (1 byte)
+    payload: jnp.ndarray          # uint32[max capacity]
+    payload_len: jnp.ndarray      # int32 scalar — transmitted word count
+    header: jnp.ndarray           # uint32[max header words], flattened
+    out_idx: jnp.ndarray
+    out_payload: jnp.ndarray
+    n_outliers: jnp.ndarray
+    overflow: jnp.ndarray
+    sign_words: jnp.ndarray | None
+    eb: jnp.ndarray | None
+
+
+# ------------------------------------------------------------ statistics --
+
+class PlaneStats(NamedTuple):
+    """Cheap per-plane statistics (all f32 scalars), one pass over the
+    packed word plane: exact §6 payload bits under zero-only and narrow
+    coding (from the per-chunk maxima), and the `ent` Shannon estimate
+    from the byte histogram of the narrowed surviving chunks through
+    the real coder's `codec.ent_code_lengths`."""
+    zero_frac: jnp.ndarray        # fraction of all-zero chunks
+    zero_bits: jnp.ndarray        # exact payload bits under the zero stage
+    narrow_bits: jnp.ndarray      # exact payload bits under narrow
+    ent_bits: jnp.ndarray         # Shannon-estimated bits under narrow|ent
+
+
+def plane_stats(words: jnp.ndarray, n_words: int) -> PlaneStats:
+    """Statistics for one packed uint32 word plane (jit-safe)."""
+    nc = C.lc_chunk_count(n_words)
+    pad = jnp.pad(words, (0, nc * C.LC_CHUNK - n_words))
+    chunks = pad.reshape(nc, C.LC_CHUNK)
+    codes = C.lc_chunk_codes(chunks, "narrow")
+    lens_w = C.lc_chunk_lens(codes)                     # words per chunk
+    alive = codes > 0
+    zero_bits = 32.0 * C.LC_CHUNK * jnp.sum(alive).astype(jnp.float32)
+    narrow_bits = 32.0 * jnp.sum(lens_w).astype(jnp.float32)
+    # ent estimate: histogram the VALID bytes of the narrowed chunks —
+    # exactly the byte multiset of the compacted stream `ent` would code
+    # in a narrow|ent chain — and price them with the coder's own
+    # length-limited code lengths; the verbatim escape means the stage
+    # never pays more than its input, hence the clamp
+    sel = C.lc_narrow_chunks(chunks, codes)
+    byts = C._ent_chunk_bytes(sel)                      # [nc, 4*LC_CHUNK]
+    word_slot = jnp.arange(byts.shape[1], dtype=jnp.int32) // 4
+    valid = word_slot[None, :] < lens_w[:, None]
+    hist = jnp.zeros(C.ENT_SYMS, jnp.int32).at[byts.reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.int32))
+    elens = C.ent_code_lengths(hist)
+    ent_bits = jnp.sum(hist.astype(jnp.float32) * elens.astype(jnp.float32))
+    return PlaneStats(
+        1.0 - jnp.mean(alive.astype(jnp.float32)),
+        zero_bits, narrow_bits, jnp.minimum(ent_bits, narrow_bits))
+
+
+def _static_hdr_bits(stages: tuple, n_words: int) -> int:
+    """Transmitted header-content bits of a word chain (a python int —
+    mirrors the static part of `Pipeline.wire_bits`: per-stage header
+    CONTENT plus the 32-bit transmitted-length field)."""
+    sizes = word_stage_sizes(stages, n_words)[:-1]
+    bits = sum(st.header_content_bits(sz) for st, sz in zip(stages, sizes))
+    if stages and stages[-1].transmits_len:
+        bits += 32
+    return bits
+
+
+def _est_payload_bits(stages: tuple, st: PlaneStats, n_words: int):
+    """Estimated transmitted payload bits of a word chain over a plane
+    with statistics `st` — exact for plain/zero/narrow, the Shannon
+    estimate for chains ending in `ent`."""
+    if not stages:
+        return jnp.float32(32 * n_words)
+    last = stages[-1]
+    if isinstance(last, EntStage):
+        return st.ent_bits
+    if isinstance(last, ChunkStage) and last.mode == "narrow":
+        return st.narrow_bits
+    if isinstance(last, ChunkStage):
+        return st.zero_bits
+    raise ValueError(f"stage {last.spec()!r} is not scoreable from the "
+                     f"shared statistics (DESIGN.md §11)")
+
+
+def chain_cost(stages: tuple, st: PlaneStats, n_words: int,
+               bias: float = 0.0):
+    """§11 scoring rule: estimated payload bits + static header content
+    + the autotuner's calibration bias (bits per 1024 words)."""
+    return (_est_payload_bits(stages, st, n_words)
+            + jnp.float32(_static_hdr_bits(stages, n_words))
+            + jnp.float32(bias) * (n_words / 1024.0))
+
+
+def _check_scoreable(stages: tuple):
+    for st in stages:
+        if not isinstance(st, (ChunkStage, EntStage)):
+            raise ValueError(
+                f"selector candidates may only contain zero/narrow/ent "
+                f"word stages (DESIGN.md §11 scoreability); got "
+                f"{st.spec()!r}")
+
+
+def _pred_key(pred: tuple) -> tuple:
+    return tuple(p.spec() for p in pred)
+
+
+# -------------------------------------------------------------- Selector --
+
+@dataclasses.dataclass(frozen=True)
+class Selector:
+    """A static candidate set of full pipelines sharing one quantizer
+    and pack stage, with runtime per-shard selection.  Hashable (usable
+    as a jit static / pytree-aux value) and duck-types the `Pipeline`
+    surface its consumers use — `compression/grads.py` ships the result
+    through the same `CompressedShard`/`Transport` path (§8 gather
+    branch, like pred chains)."""
+    name: str
+    chains: tuple                 # tuple[Pipeline, ...] sharing quant+pack
+    bias: tuple = ()              # per-chain bits/1024 words (autotuned)
+
+    def __post_init__(self):
+        if not self.chains:
+            raise ValueError("a selector needs at least one candidate")
+        if len(self.chains) > MAX_CHAINS:
+            raise ValueError(f"at most {MAX_CHAINS} candidates fit the "
+                             f"{CHAIN_ID_BITS}-bit chain-id header")
+        q0, p0 = self.chains[0].quant, self.chains[0].pack
+        for pipe in self.chains:
+            if pipe.quant != q0 or pipe.pack != p0:
+                raise ValueError(
+                    f"every candidate in a selector set must share the "
+                    f"quantizer and pack stages; {pipe.spec()!r} differs "
+                    f"from {self.chains[0].spec()!r}")
+            _check_scoreable(pipe.stages)
+        if self.bias and len(self.bias) != len(self.chains):
+            raise ValueError("bias must have one entry per candidate")
+
+    # --- Pipeline-surface statics -----------------------------------------
+
+    @property
+    def quant(self) -> QuantStage:
+        return self.chains[0].quant
+
+    @property
+    def pack(self) -> PackStage:
+        return self.chains[0].pack
+
+    def spec(self) -> str:
+        return f"auto:{self.name}"
+
+    def qcfg(self):
+        return self.chains[0].qcfg()
+
+    def n_words(self, n: int) -> int:
+        return self.chains[0].n_words(n)
+
+    def capacity_words(self, n: int) -> int:
+        """Static payload capacity of the uniform wire: the max final
+        capacity across candidates."""
+        return max(pipe.stage_sizes(n)[-1] for pipe in self.chains)
+
+    def header_capacity_words(self, n: int) -> int:
+        """Static size of the flattened header plane: the max total
+        stored header words across candidates."""
+        return max(self._chain_header_words(i, n)
+                   for i in range(len(self.chains)))
+
+    def _chain_header_words(self, i: int, n: int) -> int:
+        pipe = self.chains[i]
+        sizes = pipe.stage_sizes(n)[:-1]
+        return sum(st.header_words(sz)
+                   for st, sz in zip(pipe.stages, sizes))
+
+    def _pred_shape(self, pred_shape, n: int) -> tuple:
+        shape = (n,) if pred_shape is None else tuple(pred_shape)
+        if int(np.prod(shape)) != n:
+            raise ValueError(f"pred_shape {shape} has "
+                             f"{int(np.prod(shape))} elements, tensor "
+                             f"has {n}")
+        return shape
+
+    # --- scoring ----------------------------------------------------------
+
+    def _costs(self, bins, base_words, n: int, pred_shape):
+        """f32[n_chains] estimated transmitted bits per candidate — the
+        §11 scoring rule over per-plane statistics (one stats pass per
+        DISTINCT pred prefix in the set)."""
+        n_words = self.n_words(n)
+        shape = self._pred_shape(pred_shape, n)
+        stats = {}
+        costs = []
+        for i, pipe in enumerate(self.chains):
+            key = _pred_key(pipe.pred)
+            if key not in stats:
+                if pipe.pred:
+                    codes = P.encode_pred_stages(pipe.pred, bins, shape,
+                                                 self.pack.bits)
+                    words = C.pack_words(codes, self.pack.bits)
+                else:
+                    words = base_words
+                stats[key] = plane_stats(words, n_words)
+            b = self.bias[i] if self.bias else 0.0
+            costs.append(chain_cost(pipe.stages, stats[key], n_words, b))
+        return jnp.stack(costs)
+
+    def score(self, x, eb=None, *, pred_shape=None):
+        """Estimated wire bits per candidate (the autotuner's view of
+        the runtime scoring rule)."""
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        if pred_shape is None:
+            pred_shape = tuple(x.shape)
+        ep, qt = C.encode_packed(flat, self.qcfg(), eb,
+                                 return_quantized=True)
+        return self._costs(qt.bins, ep.words, n, pred_shape)
+
+    # --- encode -----------------------------------------------------------
+
+    def _embed(self, enc: Encoded, i: int, n: int) -> SelectedWire:
+        """Uniformize one candidate's `Encoded` into the shared wire."""
+        cap = self.capacity_words(n)
+        payload = jnp.pad(enc.payload, (0, cap - enc.payload.shape[0]))
+        hw = self.header_capacity_words(n)
+        flat_h = ([h.reshape(-1) for h in enc.headers]
+                  + [jnp.zeros((hw,), jnp.uint32)])
+        header = jnp.concatenate(flat_h)[:hw]
+        return SelectedWire(jnp.int32(i), payload, enc.payload_len, header,
+                            enc.out_idx, enc.out_payload, enc.n_outliers,
+                            enc.overflow, enc.sign_words, enc.eb)
+
+    def _view(self, wire: SelectedWire, i: int, n: int) -> Encoded:
+        """Exact inverse of `_embed` for candidate `i` (static slicing —
+        the chain id names the layout, so the wire is self-describing)."""
+        pipe = self.chains[i]
+        sizes = pipe.stage_sizes(n)
+        headers, off = [], 0
+        for st, sz in zip(pipe.stages, sizes[:-1]):
+            hw = st.header_words(sz)
+            headers.append(wire.header[off:off + hw])
+            off += hw
+        return Encoded(wire.payload[:sizes[-1]], wire.payload_len,
+                       tuple(headers), wire.out_idx, wire.out_payload,
+                       wire.n_outliers, wire.overflow, wire.sign_words,
+                       wire.eb)
+
+    def encode(self, x, eb=None, *, kernels: bool | None = None,
+               interpret: bool | None = None,
+               return_quantized: bool = False, pred_shape=None):
+        """Statistics pass -> score -> `lax.switch` into the selected
+        candidate's own `Pipeline.encode` (reference path — the branch
+        is bit-identical to encoding with that chain directly).  With
+        `return_quantized` also returns the quantizer's local planes
+        (identical across candidates: they share the quantizer, and
+        pred stages are bijections applied after it)."""
+        del kernels, interpret      # reference path; §7 open dispatch row
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        if pred_shape is None:
+            pred_shape = tuple(x.shape)
+        ep, qt = C.encode_packed(flat, self.qcfg(), eb,
+                                 return_quantized=True)
+        costs = self._costs(qt.bins, ep.words, n, pred_shape)
+        chain_id = jnp.argmin(costs).astype(jnp.int32)
+
+        def branch(i):
+            def run(v):
+                enc = self.chains[i].encode(v, eb, kernels=False,
+                                            pred_shape=pred_shape)
+                return self._embed(enc, i, n)
+            return run
+
+        wire = jax.lax.switch(chain_id,
+                              [branch(i) for i in range(len(self.chains))],
+                              flat)
+        return (wire, qt) if return_quantized else wire
+
+    # --- decode -----------------------------------------------------------
+
+    def decode(self, wire: SelectedWire, n: int | None = None, shape=None,
+               dtype=None, *, kernels: bool | None = None,
+               interpret: bool | None = None, pred_shape=None):
+        """Invert the selected chain: `lax.switch` on the transmitted
+        chain id into that candidate's own `Pipeline.decode` — bit-
+        identical to decoding the chain's plain `Encoded` directly."""
+        del kernels, interpret
+        if n is None:
+            if shape is None:
+                raise ValueError("decode needs n or shape")
+            n = int(np.prod(shape))
+        if pred_shape is None and shape is not None:
+            pred_shape = tuple(shape)
+
+        def branch(i):
+            def run(w):
+                return self.chains[i].decode(
+                    self._view(w, i, n), n=n, shape=shape, dtype=dtype,
+                    kernels=False, pred_shape=pred_shape)
+            return run
+
+        return jax.lax.switch(wire.chain_id,
+                              [branch(i) for i in range(len(self.chains))],
+                              wire)
+
+    def roundtrip(self, x, eb=None, **kw):
+        return self.decode(self.encode(x, eb, **kw), shape=x.shape, **kw)
+
+    # --- honest wire accounting -------------------------------------------
+
+    def wire_bits(self, wire: SelectedWire, n: int):
+        """Transmitted bits: the selected chain's own
+        `Pipeline.wire_bits` (dispatched on the transmitted chain id)
+        plus the `CHAIN_ID_BITS` chain-id header — the §11 layout.
+        Always traced (the chain choice is data-dependent)."""
+
+        def branch(i):
+            def run(w):
+                return jnp.float32(
+                    self.chains[i].wire_bits(self._view(w, i, n), n))
+            return run
+
+        bits = jax.lax.switch(wire.chain_id,
+                              [branch(i) for i in range(len(self.chains))],
+                              wire)
+        return bits + jnp.float32(CHAIN_ID_BITS)
+
+    def wire_bytes(self, wire: SelectedWire, n: int):
+        return self.wire_bits(wire, n) / 8.0
+
+    def capacity_bytes(self, wire: SelectedWire) -> int:
+        """Static upper bound: what a padded all-gather buffer holds."""
+        b = (wire.payload.size + wire.header.size + wire.out_idx.size
+             + wire.out_payload.size) * 4 + 8 + 4 + 1
+        if wire.sign_words is not None:
+            b += wire.sign_words.size * 4
+        return b
+
+
+# ----------------------------------------------------------- KV selector --
+
+@dataclasses.dataclass(frozen=True)
+class KVSelector:
+    """Per-page chain selection over page FRAGMENTS of the two-domain
+    grammar (optional §9 pred stages + word stages; the quantizer lives
+    in the per-page KV bound — DESIGN.md §10).  Every fragment must
+    preserve the per-page word count so pages stay independently
+    migratable; the chosen fragment's id is transmitted per page
+    (1 byte) next to the page's transmitted length."""
+    name: str
+    chains: tuple                 # tuple[(pred tuple, word tuple), ...]
+    bias: tuple = ()
+
+    def __post_init__(self):
+        if not self.chains:
+            raise ValueError("a KV selector needs at least one fragment")
+        if len(self.chains) > MAX_CHAINS:
+            raise ValueError(f"at most {MAX_CHAINS} fragments fit the "
+                             f"{CHAIN_ID_BITS}-bit chain-id header")
+        for _, word in self.chains:
+            _check_scoreable(word)
+        if self.bias and len(self.bias) != len(self.chains):
+            raise ValueError("bias must have one entry per fragment")
+
+    def spec(self) -> str:
+        return f"auto:{self.name}"
+
+    def validate_page(self, wpp: int):
+        for _, word in self.chains:
+            sizes = word_stage_sizes(word, wpp)
+            assert all(sz == wpp for sz in sizes), (
+                "selector fragments must preserve the per-page word "
+                "count so pages stay self-describing", wpp, sizes)
+
+    def header_capacity_words(self, wpp: int) -> int:
+        return max((sum(st.header_words(sz) for st, sz in
+                        zip(word, word_stage_sizes(word, wpp)[:-1]))
+                    for _, word in self.chains))
+
+    def header_content_bits(self, i: int, wpp: int) -> int:
+        """Transmitted header-content bits of fragment `i` for one page
+        (the per-page accounting `transport.wire_bytes` sums)."""
+        pred, word = self.chains[i]
+        return (_static_hdr_bits(word, wpp) - (32 if word else 0)
+                + sum(p.header_content_bits() for p in pred))
+
+    # --- per-page select / encode / decode --------------------------------
+
+    def page_costs(self, bins, shape, bits: int, wpp: int):
+        """f32[n_chains] estimated transmitted bits for ONE page's int32
+        bin plane — the §11 scoring rule over the page's word-plane
+        statistics (vmap over pages; the autotuner reads these to
+        calibrate bias)."""
+        stats, costs = {}, []
+        base = C.pack_words(bins, bits)
+        for i, (pred, word) in enumerate(self.chains):
+            key = _pred_key(pred)
+            if key not in stats:
+                if pred:
+                    codes = P.encode_pred_stages(pred, bins, shape, bits)
+                    words = C.pack_words(codes, bits)
+                else:
+                    words = base
+                stats[key] = plane_stats(words, wpp)
+            b = self.bias[i] if self.bias else 0.0
+            costs.append(chain_cost(word, stats[key], wpp, b))
+        return jnp.stack(costs)
+
+    def page_select(self, bins, shape, bits: int, wpp: int):
+        """Chain id (int32 scalar) for ONE page: argmin of
+        `page_costs`."""
+        return jnp.argmin(
+            self.page_costs(bins, shape, bits, wpp)).astype(jnp.int32)
+
+    def encode_page(self, i: int, bins, shape, bits: int, wpp: int):
+        """Encode ONE page's bin plane with fragment `i` into the
+        uniform (header, payload, payload_len) triple."""
+        pred, word = self.chains[i]
+        codes = (P.encode_pred_stages(pred, bins, shape, bits)
+                 if pred else bins)
+        words = C.pack_words(codes, bits)
+        headers, payload, plen = encode_word_stages(word, words, wpp)
+        hw = self.header_capacity_words(wpp)
+        flat_h = ([h.reshape(-1) for h in headers]
+                  + [jnp.zeros((hw,), jnp.uint32)])
+        return jnp.concatenate(flat_h)[:hw], payload, plen
+
+    def decode_page(self, i: int, header, payload, shape, bits: int,
+                    wpp: int):
+        """Exact inverse of `encode_page`: ONE page back to its int32
+        bin plane."""
+        pred, word = self.chains[i]
+        headers, off = [], 0
+        for st, sz in zip(word, word_stage_sizes(word, wpp)[:-1]):
+            hw = st.header_words(sz)
+            headers.append(header[off:off + hw])
+            off += hw
+        words = decode_word_stages(word, tuple(headers), payload, wpp)
+        bins = C.unpack_words(words, wpp * 32 // bits, bits)
+        if pred:
+            bins = P.decode_pred_stages(pred, bins, shape, bits)
+        return bins
+
+
+# ---------------------------------------------------------- set registry --
+
+def _split_fragment(frag: str, pack_bits: int):
+    """'kvdelta|zero|narrow' -> (pred tuple, word tuple) — the page-
+    fragment split `compression/kv.py` uses (leading registered pred
+    names form the value chain)."""
+    parts = [p.strip() for p in str(frag).split("|") if p.strip()]
+    npred = 0
+    while (npred < len(parts)
+           and parts[npred].split(":")[0] in P.PRED_STAGES):
+        npred += 1
+    return (P.parse_pred_stages("|".join(parts[:npred])),
+            parse_word_stages("|".join(parts[npred:]), pack_bits))
+
+
+@functools.lru_cache(maxsize=None)
+def get_selector(name: str) -> Selector:
+    """Build the full-pipeline `Selector` for a `SELECTOR_SETS` entry
+    (cached so jit sees one static instance per name)."""
+    from repro.configs.registry import SELECTOR_SETS
+
+    if name not in SELECTOR_SETS:
+        raise KeyError(f"unknown selector set {name!r}; have "
+                       f"{sorted(SELECTOR_SETS)}")
+    entry = SELECTOR_SETS[name]
+    if entry["base"] is None:
+        raise KeyError(f"selector set {name!r} is a KV page-fragment set "
+                       f"(base=None); use get_kv_selector")
+    base = parse_pipeline(entry["base"])
+    chains = []
+    for frag in entry["chains"]:
+        pred, word = _split_fragment(frag, base.pack.bits)
+        chains.append(Pipeline(base.quant, base.pack, word, pred))
+    return Selector(name, tuple(chains), tuple(entry.get("bias", ())))
+
+
+@functools.lru_cache(maxsize=None)
+def get_kv_selector(name: str) -> KVSelector:
+    """Build the per-page `KVSelector` for a base-less `SELECTOR_SETS`
+    entry (KV pages pack at 8 bits/value)."""
+    from repro.configs.registry import SELECTOR_SETS
+
+    if name not in SELECTOR_SETS:
+        raise KeyError(f"unknown selector set {name!r}; have "
+                       f"{sorted(SELECTOR_SETS)}")
+    entry = SELECTOR_SETS[name]
+    if entry["base"] is not None:
+        raise KeyError(f"selector set {name!r} is a full-pipeline set; "
+                       f"use get_selector")
+    chains = tuple(_split_fragment(f, 8) for f in entry["chains"])
+    return KVSelector(name, chains, tuple(entry.get("bias", ())))
+
+
+def is_auto_spec(spec) -> bool:
+    """True for the 'auto' / 'auto:SET' grammar extension (§11)."""
+    return isinstance(spec, str) and (spec == "auto"
+                                      or spec.startswith("auto:"))
+
+
+def _set_name(spec: str, default: str) -> str:
+    return spec.split(":", 1)[1] if ":" in spec else default
+
+
+def parse_selector(spec: str, *, default: str = "grad-wire") -> Selector:
+    """Resolve an 'auto' / 'auto:SET' spec to its `Selector`."""
+    if not is_auto_spec(spec):
+        raise ValueError(f"not an auto spec: {spec!r}")
+    return get_selector(_set_name(spec, default))
+
+
+def parse_kv_selector(spec: str, *,
+                      default: str = "kv-page") -> KVSelector:
+    """Resolve an 'auto' / 'auto:SET' spec to its `KVSelector`."""
+    if not is_auto_spec(spec):
+        raise ValueError(f"not an auto spec: {spec!r}")
+    return get_kv_selector(_set_name(spec, default))
+
+
+def parse_chain(spec):
+    """The §11-extended pipeline grammar: 'auto' / 'auto:SET' resolves
+    to a `Selector`, anything else parses as a plain `Pipeline`."""
+    if isinstance(spec, (Selector, Pipeline)):
+        return spec
+    if is_auto_spec(spec):
+        return parse_selector(spec)
+    return parse_pipeline(spec)

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 from . import codec as C
 from .pipeline import Encoded, Pipeline
 from .quantizer import dequantize_abs
+from .select import SelectedWire
 
 
 def axis_size_static(axis) -> int | None:
@@ -90,6 +91,20 @@ def _kv_wire_bytes(wire):
     rounded past 2^24 total words."""
     cap = wire.payload.shape[-1]
     n_pages = wire.payload_len.size
+    sel = getattr(wire, "select", None)
+    if sel is not None:
+        # §11 per-page selection: each page transmits a 1-byte chain id
+        # and its own length, and pays the CHOSEN fragment's header
+        # content — dispatched per page on the transmitted ids
+        hcb = jnp.asarray([sel.header_content_bits(i, cap)
+                           for i in range(len(sel.chains))], jnp.int32)
+        chain_ids = wire.chain_id.reshape(-1).astype(jnp.int32)
+        hdr_bits = jnp.sum(jnp.take(hcb, chain_ids)).astype(jnp.float32)
+        static_bits = n_pages * (8 + 32)
+        static_bits += (wire.eb2.size * 32 + wire.out_idx.size * 32
+                        + wire.out_val.size * 32 + wire.overflow.size * 8)
+        words = jnp.sum(wire.payload_len.astype(jnp.int32))
+        return (C.transmitted_bits(words, static_bits) + hdr_bits) / 8.0
     static_bits = n_pages * sum(st.header_content_bits(cap)
                                 for st in wire.stages)
     # per-page pred stages (§9) transmit their header content too — zero
@@ -128,7 +143,13 @@ def wire_bytes(wire, *, pipe: Pipeline | None = None, n: int | None = None):
         if pipe is None:
             raise TypeError("wire_bytes(Encoded) needs pipe= (and n=)")
         return pipe.wire_bytes(wire, n)
-    if isinstance(getattr(wire, "enc", None), Encoded):
+    if isinstance(wire, SelectedWire):
+        # §11 selector wire: the selected chain's own accounting plus
+        # the transmitted chain-id byte, dispatched on the chain id
+        if pipe is None or n is None:
+            raise TypeError("wire_bytes(SelectedWire) needs pipe= and n=")
+        return pipe.wire_bytes(wire, n)
+    if isinstance(getattr(wire, "enc", None), (Encoded, SelectedWire)):
         return wire.pipe.wire_bytes(wire.enc, wire.n if n is None else n)
     if hasattr(wire, "eb2") and hasattr(wire, "payload"):
         return _kv_wire_bytes(wire)
@@ -183,7 +204,10 @@ class Transport:
         # codes, and the delta of a sum is not the sum of the deltas once
         # each shard folds independently — decode-then-sum is the only
         # exact path (DESIGN.md §9), so they take the gather branch.
-        ring_ok = (self.reduce == "auto" and qc.mode == "abs"
+        # Selector wires (§11) likewise: each shard picked its own chain,
+        # so the word planes are not grid-aligned across pods.
+        ring_ok = (self.reduce == "auto" and isinstance(pipe, Pipeline)
+                   and qc.mode == "abs"
                    and not pipe.stages and not pipe.pred
                    and p is not None and p > 1
                    and p * qc.maxbin < (1 << 24))

@@ -99,7 +99,13 @@ class DecodeEngine:
     """Continuous-batching decode over `n_slots` independent requests at
     per-slot positions, each slot a batch-1 quantized cache (DESIGN.md
     §10).  Host-side slot table; device state advances through one
-    vmapped `serve_step` per `generate_step` call."""
+    vmapped `serve_step` per `generate_step` call.
+
+    `stages` is the per-page chain every boundary wire uses (a
+    `KV_PAGE_CHAINS` preset value or raw fragment), or "auto"/"auto:SET"
+    to let the §11 selector pick per page at page close — `pack_kv`
+    resolves it, so prefill/evict/stream_prefill wires all inherit the
+    choice and stay self-describing."""
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int, seq: int,
                  kv_cfg: QuantizerConfig | None = None, stages="zero",

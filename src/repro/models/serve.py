@@ -92,7 +92,10 @@ class PackedCache(NamedTuple):
 
 def pack_cache(cache: QuantCache, *, stages=()) -> PackedCache:
     """QuantCache -> transfer wire.  `stages` is a per-page chain spec in
-    the two-domain grammar: optional leading pred stages (DESIGN.md §9 —
+    the two-domain grammar — or "auto"/"auto:SET", which hands the
+    per-page choice to the §11 selector (`pack_kv` resolves it; the wire
+    carries one chain-id byte per page, so decode needs no side
+    channel): optional leading pred stages (DESIGN.md §9 —
     "kvdelta|zero|narrow" runs the previous-token delta on each page's
     bin plane before coding; the prediction is decode-side and page-local
     so migrated pages stay bit-exact) then word stages ("zero", "narrow",

@@ -148,6 +148,58 @@ def test_design_documents_the_engine():
     assert "§10" in readme
 
 
+def test_design_documents_the_selector():
+    """§11 is the adaptive-selector contract: the runtime surface
+    (`Selector`/`KVSelector`/`SelectedWire`), the registry
+    (`SELECTOR_SETS`), the chain-id header, the bit-transparency claim,
+    and the autotuner flow must all appear in DESIGN.md §11 — and
+    §7/§8/§9/§10 must cross-link to it (the selector sits on top of the
+    pipeline grammar, inside the transport accounting, across the pred
+    stages, and under the engine's page chains), plus the README
+    architecture map must carry its row."""
+    _, text = _design_sections()
+    assert "## §11" in text
+    sec11 = text.split("## §11", 1)[1]
+    for name in ("Selector", "KVSelector", "SelectedWire",
+                 "SELECTOR_SETS", "plane_stats", "CHAIN_ID_BITS",
+                 "autotune", "BENCH_select.json", "wire_bytes"):
+        assert name in sec11, (
+            f"{name!r} is undocumented in DESIGN.md §11")
+    assert "chain id" in sec11 or "chain-id" in sec11
+    assert "argmin" in sec11                       # the scoring rule
+    assert "self-describing" in sec11
+    assert "bit-identical" in sec11
+    assert "shuffle" in sec11                      # the scoreability rule
+    # §7/§8/§9/§10 each cross-link the selector section
+    for n in (7, 8, 9, 10):
+        body = text.split(f"## §{n}", 1)[1].split(f"## §{n + 1}", 1)[0]
+        assert "§11" in body, f"DESIGN.md §{n} does not cross-link §11"
+    readme = (REPO / "README.md").read_text()
+    assert "core/select.py" in readme
+    assert "§11" in readme
+
+
+def test_registry_selector_sets_resolve():
+    """Every SELECTOR_SETS entry must build: full-pipeline sets through
+    `get_selector`, page-fragment sets (base None) through
+    `get_kv_selector` — construction validates the shared base, the
+    candidate count, and the scoreability rule."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs.registry import SELECTOR_SETS
+    from repro.core import select as SEL
+
+    for name, entry in SELECTOR_SETS.items():
+        assert len(entry["bias"]) == len(entry["chains"]), name
+        if entry["base"] is None:
+            sel = SEL.get_kv_selector(name)
+            assert len(sel.chains) == len(entry["chains"])
+        else:
+            sel = SEL.get_selector(name)
+            assert sel.spec() == f"auto:{name}"
+            assert len(sel.chains) == len(entry["chains"])
+
+
 def test_registry_pipeline_presets_parse():
     import sys
     sys.path.insert(0, str(REPO / "src"))
