@@ -196,6 +196,33 @@ def markdown_decode(rows):
     return "\n".join(out)
 
 
+def markdown_audit(doc):
+    """Measured audit rows from benchmarks/audit_bench.py
+    (BENCH_audit.json) — the §12 evidence tables: the fault-injection
+    detection matrix (one row per wire, one column per fault class) and
+    the `verify=` overhead on the lossless gradient rows."""
+    classes = ("payload_bitflip", "header_bitflip", "length_truncate",
+               "chainid_swap", "nan_input")
+    out = ["| wire | " + " | ".join(c.replace("_", " ") for c in classes)
+           + " | clean |",
+           "|---|" + "---|" * (len(classes) + 1)]
+    for r in doc.get("detection", ()):
+        cells = [("ok" if r["matrix"][c] else "MISS")
+                 if c in r["matrix"] else "-" for c in classes]
+        out.append(f"| {r['kind']}:{r['name']} | " + " | ".join(cells)
+                   + f" | {'ok' if r['clean_ok'] else 'FALSE-POSITIVE'} |")
+    out += ["",
+            "| suite | chain | plain us | verify us | overhead | "
+            "violations |",
+            "|---|---|---|---|---|---|"]
+    for r in doc.get("overhead", ()):
+        out.append(
+            f"| {r['suite']} | {r['chain']} | {r['t_plain_us']:.0f} | "
+            f"{r['t_verify_us']:.0f} | {r['overhead_frac'] * 100:+.1f}% | "
+            f"{r['violations']} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
@@ -205,6 +232,10 @@ def main():
     ap.add_argument("--select-bench", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_select.json"),
         help="autotune artifact to append as a selector table (§11)")
+    ap.add_argument("--audit-bench", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_audit.json"),
+        help="audit_bench artifact to append as the §12 "
+             "detection/overhead tables")
     args = ap.parse_args()
     rows = analyze(args.mesh)
     with open(os.path.join(RESULTS, f"roofline.{args.mesh}.json"),
@@ -217,6 +248,9 @@ def main():
     if os.path.exists(args.select_bench):
         print()
         print(markdown_select(json.load(open(args.select_bench))))
+    if os.path.exists(args.audit_bench):
+        print()
+        print(markdown_audit(json.load(open(args.audit_bench))))
 
 
 if __name__ == "__main__":

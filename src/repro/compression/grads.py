@@ -200,45 +200,78 @@ class CompressedShard:
         return self.pipe.capacity_bytes(self.enc)
 
 
-def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig):
+def compress_shard(g: jnp.ndarray, cfg: GradCompressionConfig,
+                   *, integrity: bool = False):
     """Run one pod-local gradient through the compression pipeline.
     Returns (CompressedShard, Quantized) — the second carries the local
     outlier/recon planes (residual bookkeeping); only the shard's arrays
-    go on the wire."""
+    go on the wire.  `integrity=True` attaches the §12 wire checksum
+    (an extra aux plane — the transmitted planes are unchanged)."""
     pipe = cfg.pipe()
     flat = g.reshape(-1).astype(jnp.float32)
     rms = jnp.sqrt(jnp.mean(flat * flat))
     eb = jnp.asarray(cfg.eb_rel, jnp.float32) * rms
-    enc, q = pipe.encode(flat, eb=eb, return_quantized=True)
+    enc, q = pipe.encode(flat, eb=eb, return_quantized=True,
+                         integrity=integrity)
     return CompressedShard(enc, pipe, flat.size), q
 
 
 def compressed_mean(g: jnp.ndarray, cfg: GradCompressionConfig, axis: str,
-                    *, transport: Transport | None = None):
+                    *, transport: Transport | None = None,
+                    integrity: str | None = None):
     """Compressed mean of g over the `axis` collective (call inside
     shard_map).  Returns (mean, residual) — residual is THIS shard's
     error-feedback term, elementwise bounded by eb.  All wire movement
     goes through the Transport layer (DESIGN.md §8); `transport=`
     overrides the default (e.g. Transport(reduce='gather') to pin the
-    reference path)."""
+    reference path).
+
+    `integrity='drop'` (§12): every shard ships with its checksum, the
+    reduce takes the gather path, and a shard whose received wire fails
+    the check is DROPPED from the mean — the sum renormalizes by the
+    count of shards that verified, so one corrupt wire degrades the
+    mean's sample count instead of poisoning every parameter.  The
+    residual contract is unchanged (it describes what THIS shard
+    shipped; corruption is a transient fault, not a steady state).
+    `integrity='raise'` is not expressible in-graph — decode-side raise
+    policies live at the eager call sites (`Pipeline.decode(verify=)`,
+    `Transport.all_gather(verify='raise')`)."""
+    if integrity not in (None, "drop"):
+        raise ValueError(f"integrity must be None or 'drop' in-graph, "
+                         f"got {integrity!r} (DESIGN.md §12)")
     tp = TRANSPORT if transport is None else transport
     flat = g.reshape(-1).astype(jnp.float32)
-    shard, q = compress_shard(g, cfg)
+    shard, q = compress_shard(g, cfg, integrity=integrity is not None)
     # all pods must take the same branch: agree by pmax
     any_overflow = jax.lax.pmax(shard.enc.overflow.astype(jnp.int32),
                                 axis) > 0
     p = jax.lax.psum(1, axis)        # axis size (jax.lax.axis_size compat)
 
-    summed = jax.lax.cond(
-        any_overflow,
-        lambda _: jax.lax.psum(flat, axis),
-        lambda _: tp.reduce_sum(shard.enc, shard.pipe, flat.size, axis),
-        None)
+    if integrity == "drop":
+        def _verified_mean(_):
+            enc_all, ok = tp.all_gather(shard.enc, axis, verify="mask")
+            dec = jax.vmap(lambda e: shard.pipe.decode(
+                e, n=flat.size, kernels=False))(enc_all)
+            w = ok.astype(jnp.float32)
+            s = jnp.sum(dec * w[:, None], axis=0)
+            return s / jnp.maximum(jnp.sum(w), 1.0)
+
+        mean = jax.lax.cond(
+            any_overflow,
+            lambda _: jax.lax.psum(flat, axis) / p,
+            _verified_mean, None)
+    else:
+        summed = jax.lax.cond(
+            any_overflow,
+            lambda _: jax.lax.psum(flat, axis),
+            lambda _: tp.reduce_sum(shard.enc, shard.pipe, flat.size, axis),
+            None)
+        mean = summed / p
     # residual: what we failed to ship (0 for outliers — they went exact;
     # 0 if the lossless path ran)
     shipped = jnp.where(q.outlier, flat, q.recon)
     resid = jnp.where(any_overflow, 0.0, flat - shipped)
-    return (summed / p).reshape(g.shape), resid.reshape(g.shape)
+    return mean.reshape(g.shape), resid.reshape(g.shape)
 
 
 def compressed_mean_tree(grads, residuals, cfg: GradCompressionConfig,

@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import QuantizerConfig, codec
+from repro.core import audit as audit_mod
 from repro.core import predict as predict
 from repro.core import select as select_mod
 from repro.core.bitops import pow2_floor
@@ -179,7 +180,7 @@ class PackedKV:
 
     def __init__(self, payload, payload_len, headers, eb2, out_idx,
                  out_val, overflow, *, stages=(), pred=(), select=None,
-                 chain_id=None):
+                 chain_id=None, checksum=None):
         self.payload = payload        # uint32 [..., n_pages, cap_words]
         self.payload_len = payload_len  # int32 [..., n_pages]
         self.headers = headers        # tuple of uint32 [..., n_pages, hw]
@@ -191,22 +192,38 @@ class PackedKV:
         self.pred = pred              # value-domain chain (per page, §9)
         self.select = select          # KVSelector for per-page choice (§11)
         self.chain_id = chain_id      # int32 [..., n_pages] when selected
+        self.checksum = checksum      # uint32 scalar (§12, integrity=True)
 
     def tree_flatten(self):
         children = (self.payload, self.payload_len, self.headers, self.eb2,
                     self.out_idx, self.out_val, self.overflow)
         if self.select is not None:
             children = children + (self.chain_id,)
-        return children, (self.stages, self.pred, self.select)
+        if self.checksum is not None:
+            children = children + (self.checksum,)
+        return children, (self.stages, self.pred, self.select,
+                          self.checksum is not None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        stages, pred, select = aux
+        stages, pred, select, has_checksum = aux
+        checksum = None
+        if has_checksum:
+            *children, checksum = children
         chain_id = None
         if select is not None:
             *children, chain_id = children
         return cls(*children, stages=stages, pred=pred, select=select,
-                   chain_id=chain_id)
+                   chain_id=chain_id, checksum=checksum)
+
+    def with_checksum(self, checksum):
+        """Same wire, with the §12 integrity digest carried as aux (the
+        covered planes are untouched — see `core.audit`)."""
+        return PackedKV(self.payload, self.payload_len, self.headers,
+                        self.eb2, self.out_idx, self.out_val, self.overflow,
+                        stages=self.stages, pred=self.pred,
+                        select=self.select, chain_id=self.chain_id,
+                        checksum=checksum)
 
     # --- legacy field views ------------------------------------------------
     @property
@@ -234,6 +251,8 @@ class PackedKV:
             b += self.payload_len.size * 4
         if self.select is not None:
             b += self.payload_len.size * 4 + self.chain_id.size * 4
+        if self.checksum is not None:
+            b += 4                    # §12 integrity digest
         return b
 
     def wire_nbytes(self):
@@ -245,7 +264,8 @@ class PackedKV:
         return _wire_bytes(self)
 
 
-def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
+def pack_kv(q: QuantizedKV, *, page: int = 128, stages=(),
+            integrity: bool = False) -> PackedKV:
     """Bit-pack a quantized cache for the wire, optionally through a
     per-page stage chain (stages="narrow", "shuffle|narrow",
     "kvdelta|zero|narrow", ...).  Leading pred stages (DESIGN.md §9 —
@@ -260,14 +280,20 @@ def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
     stages='auto' / 'auto:SET' (DESIGN.md §11) selects the fragment PER
     PAGE from a registered `SELECTOR_SETS` candidate set at page close;
     each page transmits a 1-byte chain id next to its length, so every
-    page remains independently migratable and self-describing."""
+    page remains independently migratable and self-describing.
+
+    `integrity=True` attaches the §12 wire checksum (one digest over the
+    whole wire, carried as aux — the transmitted planes are unchanged);
+    `unpack_kv(..., verify=True)` and `Transport.send_pages(...,
+    verify=)` re-check it on receive."""
     from repro.core.pipeline import encode_word_stages, word_stage_sizes
 
     if select_mod.is_auto_spec(stages) or isinstance(stages,
                                                      select_mod.KVSelector):
         sel = (stages if isinstance(stages, select_mod.KVSelector)
                else select_mod.parse_kv_selector(stages))
-        return _pack_kv_select(q, sel, page=page)
+        p = _pack_kv_select(q, sel, page=page)
+        return audit_mod.attach_checksum(p) if integrity else p
     pred, st = _page_stages(stages)
     *lead, s, d = q.bins.shape
     n_pages = s // page
@@ -281,8 +307,9 @@ def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
     wpp = per // 4
     if not st:
         plen = jnp.full((*lead, n_pages), wpp, jnp.int32)
-        return PackedKV(words.reshape(*lead, n_pages, wpp), plen, (),
-                        q.eb2, q.out_idx, q.out_val, q.overflow, pred=pred)
+        p = PackedKV(words.reshape(*lead, n_pages, wpp), plen, (),
+                     q.eb2, q.out_idx, q.out_val, q.overflow, pred=pred)
+        return audit_mod.attach_checksum(p) if integrity else p
     sizes = word_stage_sizes(st, wpp)
     assert all(sz == wpp for sz in sizes), (
         "stage chain must preserve the per-page word count so pages stay "
@@ -291,9 +318,10 @@ def pack_kv(q: QuantizedKV, *, page: int = 128, stages=()) -> PackedKV:
         lambda w: encode_word_stages(st, w, wpp))(words)
     # explicit last dim: headerless stages carry shape (0,) planes
     headers = tuple(h.reshape(*lead, n_pages, h.shape[-1]) for h in headers)
-    return PackedKV(payload.reshape(*lead, n_pages, -1),
-                    plen.reshape(*lead, n_pages), headers, q.eb2,
-                    q.out_idx, q.out_val, q.overflow, stages=st, pred=pred)
+    p = PackedKV(payload.reshape(*lead, n_pages, -1),
+                 plen.reshape(*lead, n_pages), headers, q.eb2,
+                 q.out_idx, q.out_val, q.overflow, stages=st, pred=pred)
+    return audit_mod.attach_checksum(p) if integrity else p
 
 
 def _pack_kv_select(q: QuantizedKV, sel, *, page: int = 128) -> PackedKV:
@@ -327,13 +355,25 @@ def _pack_kv_select(q: QuantizedKV, sel, *, page: int = 128) -> PackedKV:
                     select=sel, chain_id=cid.reshape(*lead, n_pages))
 
 
-def unpack_kv(p: PackedKV, *, page: int = 128) -> QuantizedKV:
+def unpack_kv(p: PackedKV, *, page: int = 128,
+              verify: bool = False) -> QuantizedKV:
     """Inverse of pack_kv (bit-exact for every stage chain): restore the
     int8 decode layout.  Selected wires (§11) dispatch per page on the
-    transmitted chain id."""
+    transmitted chain id.
+
+    §12 guards: per-page transmitted lengths outside [0, words-per-page]
+    raise `audit.WireIntegrityError` host-side (traced lengths are
+    clamped inside the codec's gathers); `verify=True` re-checks the
+    carried checksum (host-side — requires pack_kv(integrity=True))."""
     from repro.core.pipeline import decode_word_stages
 
     *lead, n_pages, wpp = p.payload.shape
+    audit_mod.check_payload_len(p.payload_len, wpp, what="PackedKV")
+    if verify:
+        ok = audit_mod.verify_wire(p)
+        if not isinstance(ok, jax.core.Tracer) and not bool(ok):
+            raise audit_mod.WireIntegrityError(
+                "PackedKV: checksum mismatch on unpack")
     if p.select is not None:
         per = wpp * 4
         d = per // page

@@ -15,7 +15,11 @@ Public API:
     shuffle_words/unshuffle_words — zigzag+byte-plane shuffle stage (§7)
     serialize/deserialize       — host byte stream (LC-style inline outliers)
     log2approx/pow2approx       — parity-safe transcendental replacements
+    AuditReport / verify_wire / attach_checksum — guarantee-audit plane (§12)
 """
+from .audit import (AuditReport, WireIntegrityError, attach_checksum,
+                    audit_report, get_policy, register_policy, verify_wire,
+                    wire_checksum)
 from .bitops import bits_to_float, float_to_bits, log2approx, pow2approx
 from .codec import (ENT_MAX_LEN, ENT_SYMS, LC_CHUNK, LC_STAGES,
                     EncodedCompact, EncodedDense, EncodedLC, EncodedPacked,
@@ -55,6 +59,8 @@ __all__ = [
     "GRAMMAR", "PRED_STAGES", "register_pred_stage", "parse_pred_stages",
     "DeltaStage", "LorenzoStage", "KVDeltaStage",
     "Transport", "TRANSPORT",
+    "AuditReport", "WireIntegrityError", "audit_report", "wire_checksum",
+    "attach_checksum", "verify_wire", "register_policy", "get_policy",
     "serialize", "deserialize", "compression_ratio",
     "log2approx", "pow2approx", "float_to_bits", "bits_to_float",
 ]

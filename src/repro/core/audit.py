@@ -1,0 +1,291 @@
+"""Guarantee-audit plane (DESIGN.md §12): device-side bound verification
+and wire-integrity checksums.
+
+The paper's claim is that LC *guarantees* the error bound; this module
+makes the guarantee observable at runtime instead of only in tests:
+
+  * `audit_report` fuses decode-and-check into the encode pass — one
+    `|x - x̂| <= eb` reduction over planes the encoder already computed
+    (no host round-trip, no second decode).  Opt in via
+    `Pipeline.encode(..., verify=True)` / `Selector.encode(..., verify=True)`.
+  * `wire_checksum` / `attach_checksum` / `verify_wire` cover the
+    transmitted planes of every wire container (`Encoded`,
+    `SelectedWire`, `PackedKV`) with a position-mixed 32-bit xor fold.
+    The checksum rides as an EXTRA aux field — opt in via
+    `integrity=True` at encode — so clean-path wires stay bit-identical
+    to checksum-free encodes.
+  * `DEGRADATION_POLICIES` names what a failed check routes to:
+    `raise` (structured `WireIntegrityError`), `drop` (drop the shard
+    from a mean and renormalize — `compression.grads.compressed_mean`),
+    `rerequest` (skip the page insert, caller re-sends —
+    `models.engine.DecodeEngine`).
+
+Checksum scope: every plane a receiver uses to decode — payload (full
+padded plane; padding is deterministically zero on clean wires, so
+truncation faults hit it), headers, transmitted lengths, chain ids,
+outlier planes, eb/sign planes — EXCLUDING the checksum field itself.
+The fold mixes each word with its position ((i+1) * 0x9E3779B9) and
+avalanches the pair (murmur3 fmix32) before the xor reduction, so word
+swaps, moved content, and repeated same-value corruption all change the
+digest — a plain xor would cancel even-multiplicity changes.
+
+Dispatch over wire types is duck-typed (like `transport.wire_bytes`) so
+this module imports none of the container modules — they import us.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MIX = 0x9E3779B9  # golden-ratio odd constant: position-dependent mixing
+
+
+class WireIntegrityError(ValueError):
+    """A transmitted wire failed a structural or checksum audit."""
+
+
+# ------------------------------------------------------------ checksum ----
+
+def _as_u32_words(a) -> jnp.ndarray:
+    """Reinterpret any wire plane as a flat uint32 word stream (bit-exact
+    for 32-bit dtypes; widened for bool / narrow ints)."""
+    a = jnp.asarray(a)
+    if a.dtype == jnp.bool_:
+        a = a.astype(jnp.uint32)
+    elif jnp.issubdtype(a.dtype, jnp.floating):
+        a = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.uint32)
+    elif a.dtype.itemsize != 4:
+        a = a.astype(jnp.int32)
+    if a.dtype != jnp.uint32:
+        a = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    return a.reshape(-1)
+
+
+def _fold(a) -> jnp.ndarray:
+    u = _as_u32_words(a)
+    if u.size == 0:
+        return jnp.uint32(0)
+    pos = (jnp.arange(u.size, dtype=jnp.uint32) + jnp.uint32(1)) \
+        * jnp.uint32(_MIX)
+    # Avalanche each (word, position) pair BEFORE the xor reduction
+    # (murmur3 fmix32).  A linear u ^ pos fold is not enough: the same
+    # value change at an even number of positions would cancel under
+    # xor (e.g. every page's chain id bumping 0 -> 1).  After the
+    # nonlinear mix, each position's delta is distinct, so
+    # even-multiplicity corruption no longer annihilates.
+    m = u ^ pos
+    m = m * jnp.uint32(0x85EBCA6B)
+    m = m ^ (m >> 13)
+    m = m * jnp.uint32(0xC2B2AE35)
+    m = m ^ (m >> 16)
+    return jax.lax.reduce(m, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+
+
+def _rotl(x, r: int):
+    return (x << r) | (x >> (32 - r))
+
+
+def _planes(wire) -> list:
+    """The covered planes of a wire container, in a fixed order.  Duck-typed:
+    `eb2` -> PackedKV (it also has chain_id), `chain_id` -> SelectedWire,
+    `headers` -> Encoded."""
+    if hasattr(wire, "eb2"):                              # compression.kv.PackedKV
+        planes = [wire.payload, wire.payload_len, *wire.headers, wire.eb2,
+                  wire.out_idx, wire.out_val, wire.overflow]
+        if wire.chain_id is not None:
+            planes.append(wire.chain_id)
+        return planes
+    if hasattr(wire, "chain_id"):                         # core.select.SelectedWire
+        planes = [wire.chain_id, wire.payload, wire.payload_len,
+                  wire.header, wire.out_idx, wire.out_payload,
+                  wire.n_outliers, wire.overflow]
+    elif hasattr(wire, "headers"):                        # core.pipeline.Encoded
+        planes = [wire.payload, wire.payload_len, *wire.headers,
+                  wire.out_idx, wire.out_payload, wire.n_outliers,
+                  wire.overflow]
+    else:
+        raise TypeError(f"not an audited wire container: {type(wire)!r}")
+    if wire.sign_words is not None:
+        planes.append(wire.sign_words)
+    if wire.eb is not None:
+        planes.append(wire.eb)
+    return planes
+
+
+def wire_checksum(wire) -> jnp.ndarray:
+    """Position-mixed 32-bit xor fold over a wire's transmitted planes
+    (excluding any carried checksum).  jit-safe; one pass per plane."""
+    cs = jnp.uint32(0)
+    for p in _planes(wire):
+        cs = _rotl(cs, 5) ^ _fold(p)
+    return cs
+
+
+def has_checksum(wire) -> bool:
+    return getattr(wire, "checksum", None) is not None
+
+
+def attach_checksum(wire):
+    """Return the same wire with its checksum computed and carried as aux.
+    The covered planes are untouched — a checksum-free decode of the
+    result is bit-identical."""
+    cs = wire_checksum(wire)
+    if hasattr(wire, "with_checksum"):                    # PackedKV
+        return wire.with_checksum(cs)
+    return wire._replace(checksum=cs)                     # NamedTuple wires
+
+
+def verify_wire(wire) -> jnp.ndarray:
+    """Recompute the checksum and compare to the carried one.  Returns a
+    traced bool (vmap-able); raises host-side if the wire carries none."""
+    if not has_checksum(wire):
+        raise ValueError("wire carries no checksum — encode it with "
+                         "integrity=True (DESIGN.md §12)")
+    return wire_checksum(wire) == wire.checksum
+
+
+def verify_gathered(wire) -> jnp.ndarray:
+    """Per-shard verdicts for a wire with a gathered leading axis (the
+    result of `Transport.all_gather`): bool[axis_size]."""
+    return jax.vmap(verify_wire)(wire)
+
+
+# ----------------------------------------------------- length validation --
+
+def check_payload_len(payload_len, capacity: int, *, what: str = "wire"):
+    """Satellite guard for transmitted length fields: a corrupt
+    `payload_len` past the padded plane's capacity must raise a structured
+    error, not index garbage.  Host-side only — traced lengths are clamped
+    defensively inside `codec.gather_chunks` instead."""
+    if isinstance(payload_len, jax.core.Tracer):
+        return
+    lens = np.asarray(payload_len)
+    if lens.size and ((lens < 0).any() or (lens > capacity).any()):
+        bad = lens.reshape(-1)
+        raise WireIntegrityError(
+            f"{what}: transmitted payload_len {bad[:8].tolist()}"
+            f"{'...' if bad.size > 8 else ''} outside [0, {capacity}] — "
+            f"corrupt or truncated wire (DESIGN.md §12)")
+
+
+# ------------------------------------------------------- bound auditing ---
+
+class AuditReport(NamedTuple):
+    """Device-side §1-guarantee audit of one encode (all fields are 0-d
+    arrays; the pytree flows through jit/shard_map without host sync).
+
+    n:           elements audited
+    violations:  non-outlier finite values with |x - x̂| > eb — MUST be 0;
+                 anything else is a codec regression or corrupt memory
+    max_err:     max |x - x̂| over audited values (f32; REL: relative err)
+    n_nonfinite: NaN/INF inputs (§1 failure taxonomy — routed to lossless
+                 outlier storage, never binned)
+    n_outliers:  values stored losslessly (includes the non-finite ones)
+    overflow:    outlier plane overflowed its cap (wire already flags it)
+    """
+
+    n: jnp.ndarray
+    violations: jnp.ndarray
+    max_err: jnp.ndarray
+    n_nonfinite: jnp.ndarray
+    n_outliers: jnp.ndarray
+    overflow: jnp.ndarray
+
+    def ok(self):
+        """True iff the bound held everywhere and nothing was dropped."""
+        return (self.violations == 0) & ~self.overflow
+
+
+def audit_report(x, q, cfg, eb=None, overflow=None,
+                 n_outliers=None) -> AuditReport:
+    """Build an `AuditReport` from planes the encoder already computed
+    (`Quantized` from the shared quantize pass) — one extra reduction,
+    no re-decode.  The three elementwise counters reduce in a SINGLE
+    variadic `lax.reduce` pass, and `n_outliers` should be the wire's
+    already-summed count (it equals `sum(q.outlier)` by construction) —
+    together that keeps the audit inside the <=5% overhead bound the
+    committed BENCH_audit.json pins, even on the cheapest chains.
+
+    The violation test uses the PLAIN requested bound (not eb*TIGHTEN):
+    the encoder accepted only `diff <= eb*TIGHTEN < eb`, so a clean
+    encode audits to zero violations with margin, and anything the audit
+    flags is a true guarantee break.
+    """
+    dt = x.dtype
+    finite = jnp.isfinite(x)
+    checked = finite & ~q.outlier
+    zero = jnp.zeros((), dt)
+    if cfg.mode == "rel":
+        # relative metric: |x - x̂| <= eb * |x|; report err / |x|
+        bound = jnp.asarray(cfg.error_bound, dt)
+        ax = jnp.where(checked, jnp.abs(x), jnp.ones((), dt))
+        err = jnp.where(checked, jnp.abs(x - q.recon) / ax, zero)
+    else:
+        # abs / noa: mirror the encoder's traced-eb floor transform
+        e = jnp.asarray(cfg.error_bound if eb is None else eb, dt)
+        bound = jnp.maximum(e, jnp.asarray(cfg.eb_floor, dt))
+        err = jnp.where(checked, jnp.abs(x - q.recon), zero)
+    bad = checked & ~(err <= bound)
+    if overflow is None:
+        overflow = jnp.zeros((), jnp.bool_)
+
+    def _acc(a, b):
+        return (jnp.maximum(a[0], b[0]), a[1] + b[1], a[2] + b[2])
+
+    max_err, violations, n_nonfinite = jax.lax.reduce(
+        (err.astype(jnp.float32).reshape(-1),
+         bad.reshape(-1).astype(jnp.int32),
+         (~finite).reshape(-1).astype(jnp.int32)),
+        (jnp.float32(0), jnp.int32(0), jnp.int32(0)), _acc, (0,))
+    if n_outliers is None:
+        n_outliers = jnp.sum(q.outlier, dtype=jnp.int32)
+    return AuditReport(
+        n=jnp.int32(x.size),
+        violations=violations,
+        max_err=max_err,
+        n_nonfinite=n_nonfinite,
+        n_outliers=jnp.asarray(n_outliers).astype(jnp.int32).reshape(()),
+        overflow=jnp.asarray(overflow).astype(jnp.bool_).reshape(()),
+    )
+
+
+# -------------------------------------------------- degradation policies --
+
+def _raise_policy(ctx: dict):
+    raise WireIntegrityError(
+        f"wire integrity check failed at {ctx.get('site', '?')}: {ctx}")
+
+
+def _drop_policy(ctx: dict):
+    return "drop"
+
+
+def _rerequest_policy(ctx: dict):
+    return "rerequest"
+
+
+# name -> handler(ctx) -> action token ("drop" | "rerequest") or raises.
+# Sites with in-graph handling (compressed_mean's drop-and-renormalize)
+# implement the action in the traced graph; host-driven sites (engine
+# insert) call the handler directly.
+DEGRADATION_POLICIES = {
+    "raise": _raise_policy,
+    "drop": _drop_policy,
+    "rerequest": _rerequest_policy,
+}
+
+
+def register_policy(name: str, handler):
+    """Register a degradation policy: handler(ctx_dict) -> action token,
+    or raise.  See DESIGN.md §12 for the contract."""
+    DEGRADATION_POLICIES[name] = handler
+
+
+def get_policy(name: str):
+    if name not in DEGRADATION_POLICIES:
+        raise KeyError(f"unknown degradation policy {name!r}; have "
+                       f"{sorted(DEGRADATION_POLICIES)}")
+    return DEGRADATION_POLICIES[name]

@@ -512,12 +512,18 @@ def compact_chunks(sel: jnp.ndarray, lens: jnp.ndarray):
 
 def gather_chunks(payload: jnp.ndarray, lens: jnp.ndarray) -> jnp.ndarray:
     """Inverse of compact_chunks: re-pad each chunk's words to LC_CHUNK
-    slots.  Returns uint32[n_chunks, LC_CHUNK]."""
+    slots.  Returns uint32[n_chunks, LC_CHUNK].
+
+    Corrupt (over-long) transmitted lengths would otherwise index past
+    the padded plane; the clamp makes the gather deterministic on every
+    backend — host-side length validation with a structured error lives
+    at the decode entries (audit.check_payload_len, DESIGN.md §12)."""
     ends = jnp.cumsum(lens)
     offs = ends - lens
     slot = jnp.arange(LC_CHUNK, dtype=jnp.int32)[None, :]
     valid = slot < lens[:, None]
     src = jnp.where(valid, offs[:, None] + slot, 0)
+    src = jnp.clip(src, 0, jnp.int32(payload.shape[0] - 1))
     return jnp.where(valid, payload[src], jnp.uint32(0))
 
 

@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import audit as A
 from . import codec as C
 from . import predict as P
 from .config import QuantizerConfig
@@ -84,7 +85,10 @@ class Encoded(NamedTuple):
     stages), so gathers and vmaps stay structurally uniform.  The outlier
     table and sign plane are exactly the §4 ones — no stage may touch
     them.  Wire accounting lives on the Pipeline (`Pipeline.wire_bits`),
-    which knows each stage's transmitted header content.
+    which knows each stage's transmitted header content.  `checksum` is
+    the OPT-IN §12 integrity digest (encode with integrity=True): an
+    extra aux plane over the transmitted fields, never inside them, so
+    checksum-free wires stay bit-identical to pre-§12 encodes.
     """
     payload: jnp.ndarray          # uint32[capacity] — final word plane
     payload_len: jnp.ndarray      # int32 scalar — words a transport moves
@@ -95,6 +99,7 @@ class Encoded(NamedTuple):
     overflow: jnp.ndarray         # bool scalar (bound NOT met when True)
     sign_words: jnp.ndarray | None  # uint32 (REL only)
     eb: jnp.ndarray | None        # traced scalar bound
+    checksum: jnp.ndarray | None = None  # uint32 scalar (§12, integrity=True)
 
 
 def _fmt(v: float) -> str:
@@ -433,56 +438,90 @@ class Pipeline:
 
     def encode(self, x, eb=None, *, kernels: bool | None = None,
                interpret: bool | None = None, return_quantized: bool = False,
-               pred_shape=None):
+               pred_shape=None, verify: bool = False,
+               integrity: bool = False):
         """Encode x through the full chain.  kernels=None dispatches the
         fused Pallas path on TPU and the jit reference elsewhere (bit-
         identical); return_quantized forces the reference quantizer so the
         local outlier/recon planes exist for residual bookkeeping.
         `pred_shape` is the value-domain shape the pred stages see
         (defaults to x.shape) — it lets a flattened stream keep its plane
-        structure for `lorenzo`/`kvdelta`."""
+        structure for `lorenzo`/`kvdelta`.
+
+        §12 audit plane: `verify=True` fuses the decode-and-check audit
+        into this pass (it shares the reference quantizer's recon plane,
+        so it forces the reference path like return_quantized) and
+        appends an `audit.AuditReport` to the return; `integrity=True`
+        attaches the 32-bit wire checksum as aux (any dispatch path —
+        the covered planes are bit-identical across backends).  Returns
+        enc | (enc, qt) | (enc, report) | (enc, qt, report)."""
         n = int(np.prod(x.shape))
         if pred_shape is None:
             pred_shape = tuple(x.shape)
         use_k = (self._auto_kernels() if kernels is None else kernels)
-        if use_k and not return_quantized:
+        if use_k and not return_quantized and not verify:
             target = self.kernel_dispatch()
             if target == "repro.kernels.pack.encode_packed":
                 from repro.kernels import pack as _kp      # lazy: circular
                 ep = _kp.encode_packed(x, self.qcfg(), eb,
                                        interpret=interpret)
-                return self._wrap_packed(ep, n)
+                enc = self._wrap_packed(ep, n)
+                return A.attach_checksum(enc) if integrity else enc
             if target == "repro.kernels.lossless.encode_packed_lc":
                 from repro.kernels import lossless as _kl
                 lc = _kl.encode_packed_lc(x, self.qcfg(), eb,
                                           stage=self.stages[0].mode,
                                           interpret=interpret)
-                return Encoded(lc.payload, lc.payload_len,
-                               (lc.header_words,), lc.out_idx,
-                               lc.out_payload, lc.n_outliers, lc.overflow,
-                               lc.sign_words, lc.eb)
+                enc = Encoded(lc.payload, lc.payload_len,
+                              (lc.header_words,), lc.out_idx,
+                              lc.out_payload, lc.n_outliers, lc.overflow,
+                              lc.sign_words, lc.eb)
+                return A.attach_checksum(enc) if integrity else enc
         ep, qt = C.encode_packed(x, self.qcfg(), eb, return_quantized=True,
                                  bin_transform=self._bin_transform(
                                      pred_shape, n))
         enc = self._wrap_packed(ep, n)
+        if integrity:
+            enc = A.attach_checksum(enc)
+        if verify:
+            report = A.audit_report(
+                x, qt, self.qcfg(),
+                eb=enc.eb if enc.eb is not None else eb,
+                overflow=enc.overflow, n_outliers=enc.n_outliers)
+            return (enc, qt, report) if return_quantized else (enc, report)
         return (enc, qt) if return_quantized else enc
 
     # --- decode -----------------------------------------------------------
 
     def decode(self, enc: Encoded, n: int | None = None, shape=None,
                dtype=None, *, kernels: bool | None = None,
-               interpret: bool | None = None, pred_shape=None):
+               interpret: bool | None = None, pred_shape=None,
+               verify: bool = False):
         """Invert the chain: word stages in reverse, pred stages inverted
         on the bin plane, then unpack + dequantize + exact outlier
         restore.  Bit-identical between the fused-kernel and reference
         back ends.  `pred_shape` must match the encode-side value (it
-        defaults to `shape`, falling back to the flat stream)."""
+        defaults to `shape`, falling back to the flat stream).
+
+        §12 guards: a transmitted `payload_len` outside the padded
+        plane's [0, capacity] raises `audit.WireIntegrityError` host-side
+        (traced lengths are clamped inside the codec's gathers instead);
+        `verify=True` re-checks the carried integrity checksum before
+        decoding (host-side — raises on mismatch; requires a wire
+        encoded with integrity=True)."""
         if n is None:
             if shape is None:
                 raise ValueError("decode needs n or shape")
             n = int(np.prod(shape))
         if pred_shape is None and shape is not None:
             pred_shape = tuple(shape)
+        A.check_payload_len(enc.payload_len, enc.payload.shape[0],
+                            what=f"Encoded[{self.spec()}]")
+        if verify:
+            ok = A.verify_wire(enc)
+            if not isinstance(ok, jax.core.Tracer) and not bool(ok):
+                raise A.WireIntegrityError(
+                    f"Encoded[{self.spec()}]: checksum mismatch on decode")
         words = self.decode_words(enc.headers, enc.payload, self.n_words(n))
         ep = C.EncodedPacked(words, enc.out_idx, enc.out_payload,
                              enc.n_outliers, enc.overflow, enc.sign_words,
@@ -506,6 +545,8 @@ class Pipeline:
         bits = 64 + enc.out_idx.shape[0] * (32 + 32)
         if enc.sign_words is not None:
             bits += 32 * enc.sign_words.shape[0]
+        if enc.checksum is not None:
+            bits += 32                             # §12 integrity digest
         # pred stages transmit their header CONTENT here (§9).  Every
         # shipped predictor is a static bijection with zero header bits,
         # but the accounting slot is part of the value-stage contract, so
@@ -553,6 +594,8 @@ class Pipeline:
              + sum(h.size for h in enc.headers)) * 4 + 8
         if enc.sign_words is not None:
             b += enc.sign_words.size * 4
+        if enc.checksum is not None:
+            b += 4                                 # §12 integrity digest
         if self.stages:
             b += 4                                 # transmitted length field
         return b

@@ -57,12 +57,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import audit as A
 from . import codec as C
 from . import predict as P
 from .pipeline import (ChunkStage, Encoded, EntStage, PackStage, Pipeline,
@@ -89,7 +91,10 @@ class SelectedWire(NamedTuple):
         chain's static layout);
       * the rest is exactly the §4 outlier table / sign plane / bound —
         identical across candidates because every chain in a set shares
-        the quantizer and pack stages.
+        the quantizer and pack stages;
+      * `checksum` — the OPT-IN §12 integrity digest (encode with
+        integrity=True), carried as aux so checksum-free wires stay
+        bit-identical to pre-§12 encodes.
     """
     chain_id: jnp.ndarray         # int32 scalar — transmitted (1 byte)
     payload: jnp.ndarray          # uint32[max capacity]
@@ -101,6 +106,7 @@ class SelectedWire(NamedTuple):
     overflow: jnp.ndarray
     sign_words: jnp.ndarray | None
     eb: jnp.ndarray | None
+    checksum: jnp.ndarray | None = None  # uint32 scalar (§12)
 
 
 # ------------------------------------------------------------ statistics --
@@ -336,13 +342,32 @@ class Selector:
 
     def encode(self, x, eb=None, *, kernels: bool | None = None,
                interpret: bool | None = None,
-               return_quantized: bool = False, pred_shape=None):
+               return_quantized: bool = False, pred_shape=None,
+               verify: bool = False, integrity: bool = False):
         """Statistics pass -> score -> `lax.switch` into the selected
         candidate's own `Pipeline.encode` (reference path — the branch
         is bit-identical to encoding with that chain directly).  With
         `return_quantized` also returns the quantizer's local planes
         (identical across candidates: they share the quantizer, and
-        pred stages are bijections applied after it)."""
+        pred stages are bijections applied after it).
+
+        `kernels=` is accepted for Pipeline-surface compatibility but
+        the selector ALWAYS runs the jit reference: the fused Pallas
+        kernels have no statistics/switch slot yet — that is the open
+        fused-selector row in the DESIGN.md §7 dispatch table.  A
+        truthy request warns once rather than silently downgrading.
+
+        §12 audit plane (mirrors `Pipeline.encode`): `verify=True`
+        appends an `audit.AuditReport` built from the shared quantizer
+        pass (one report, valid for whichever candidate wins — they
+        share the quantizer); `integrity=True` attaches the 32-bit
+        checksum over the uniform wire as aux."""
+        if kernels:
+            warnings.warn(
+                "Selector.encode always runs the jit reference — the "
+                "fused selector kernel is the open row in the DESIGN.md "
+                "§7 dispatch table; kernels= is ignored", UserWarning,
+                stacklevel=2)
         del kernels, interpret      # reference path; §7 open dispatch row
         flat = x.reshape(-1)
         n = flat.shape[0]
@@ -363,16 +388,35 @@ class Selector:
         wire = jax.lax.switch(chain_id,
                               [branch(i) for i in range(len(self.chains))],
                               flat)
+        if integrity:
+            wire = A.attach_checksum(wire)
+        if verify:
+            report = A.audit_report(
+                x, qt, self.qcfg(),
+                eb=wire.eb if wire.eb is not None else eb,
+                overflow=wire.overflow, n_outliers=wire.n_outliers)
+            return (wire, qt, report) if return_quantized else (wire, report)
         return (wire, qt) if return_quantized else wire
 
     # --- decode -----------------------------------------------------------
 
     def decode(self, wire: SelectedWire, n: int | None = None, shape=None,
                dtype=None, *, kernels: bool | None = None,
-               interpret: bool | None = None, pred_shape=None):
+               interpret: bool | None = None, pred_shape=None,
+               verify: bool = False):
         """Invert the selected chain: `lax.switch` on the transmitted
         chain id into that candidate's own `Pipeline.decode` — bit-
-        identical to decoding the chain's plain `Encoded` directly."""
+        identical to decoding the chain's plain `Encoded` directly.
+        `kernels=` is ignored like on encode (same open §7 fused slot —
+        a truthy request warns once).  §12 guards mirror
+        `Pipeline.decode`: host-side `payload_len` range validation,
+        and `verify=True` re-checks the carried checksum."""
+        if kernels:
+            warnings.warn(
+                "Selector.decode always runs the jit reference — the "
+                "fused selector kernel is the open row in the DESIGN.md "
+                "§7 dispatch table; kernels= is ignored", UserWarning,
+                stacklevel=2)
         del kernels, interpret
         if n is None:
             if shape is None:
@@ -380,6 +424,14 @@ class Selector:
             n = int(np.prod(shape))
         if pred_shape is None and shape is not None:
             pred_shape = tuple(shape)
+        A.check_payload_len(wire.payload_len, wire.payload.shape[0],
+                            what=f"SelectedWire[{self.spec()}]")
+        if verify:
+            ok = A.verify_wire(wire)
+            if not isinstance(ok, jax.core.Tracer) and not bool(ok):
+                raise A.WireIntegrityError(
+                    f"SelectedWire[{self.spec()}]: checksum mismatch on "
+                    f"decode")
 
         def branch(i):
             def run(w):
@@ -412,6 +464,8 @@ class Selector:
         bits = jax.lax.switch(wire.chain_id,
                               [branch(i) for i in range(len(self.chains))],
                               wire)
+        if wire.checksum is not None:
+            bits = bits + jnp.float32(32)          # §12 integrity digest
         return bits + jnp.float32(CHAIN_ID_BITS)
 
     def wire_bytes(self, wire: SelectedWire, n: int):
@@ -423,6 +477,8 @@ class Selector:
              + wire.out_payload.size) * 4 + 8 + 4 + 1
         if wire.sign_words is not None:
             b += wire.sign_words.size * 4
+        if wire.checksum is not None:
+            b += 4                                 # §12 integrity digest
         return b
 
 

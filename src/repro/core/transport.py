@@ -49,10 +49,12 @@ the gather path, which IS the pre-transport reference code path.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from . import audit as A
 from . import codec as C
 from .pipeline import Encoded, Pipeline
 from .quantizer import dequantize_abs
@@ -91,6 +93,7 @@ def _kv_wire_bytes(wire):
     rounded past 2^24 total words."""
     cap = wire.payload.shape[-1]
     n_pages = wire.payload_len.size
+    checksum_bits = 32 if getattr(wire, "checksum", None) is not None else 0
     sel = getattr(wire, "select", None)
     if sel is not None:
         # §11 per-page selection: each page transmits a 1-byte chain id
@@ -100,13 +103,13 @@ def _kv_wire_bytes(wire):
                            for i in range(len(sel.chains))], jnp.int32)
         chain_ids = wire.chain_id.reshape(-1).astype(jnp.int32)
         hdr_bits = jnp.sum(jnp.take(hcb, chain_ids)).astype(jnp.float32)
-        static_bits = n_pages * (8 + 32)
+        static_bits = n_pages * (8 + 32) + checksum_bits
         static_bits += (wire.eb2.size * 32 + wire.out_idx.size * 32
                         + wire.out_val.size * 32 + wire.overflow.size * 8)
         words = jnp.sum(wire.payload_len.astype(jnp.int32))
         return (C.transmitted_bits(words, static_bits) + hdr_bits) / 8.0
-    static_bits = n_pages * sum(st.header_content_bits(cap)
-                                for st in wire.stages)
+    static_bits = checksum_bits + n_pages * sum(st.header_content_bits(cap)
+                                                for st in wire.stages)
     # per-page pred stages (§9) transmit their header content too — zero
     # for the shipped static bijections, but the slot keeps this accessor
     # bit-exact against Pipeline.wire_bits for any future predictor
@@ -173,8 +176,15 @@ class Transport:
     reduce: 'auto' takes the packed-domain ring whenever the §8
     compatibility rule allows (runtime-agreed, bit-identical); 'gather'
     pins the gather+dequantize+reduce reference path unconditionally.
+
+    fault: TEST-ONLY in-graph corruption hook (DESIGN.md §12): applied
+    to every received wire pytree right after the collective, BEFORE
+    any verify — the fault-injection harness (`runtime.guard`) uses it
+    to prove the receive-side checks catch in-flight corruption.  Must
+    be a hashable callable (wire) -> wire; None in production.
     """
     reduce: str = "auto"               # 'auto' | 'gather'
+    fault: Callable | None = None      # §12 test-only corruption hook
 
     def __post_init__(self):
         if self.reduce not in ("auto", "gather"):
@@ -183,12 +193,43 @@ class Transport:
 
     # --- collectives ------------------------------------------------------
 
-    def all_gather(self, wire, axis):
+    def _verify_received(self, wire, verify, what: str):
+        """Shared §12 receive-side check: verify=None passes the wire
+        through untouched (and unchecked); 'mask' appends per-shard
+        verdicts from the carried checksums — (wire, bool[axis_size]);
+        'raise' checks host-side and raises `WireIntegrityError` (eager
+        only — inside jit/shard_map use 'mask' and route the verdicts to
+        a degradation policy in-graph)."""
+        if verify is None:
+            return wire
+        ok = A.verify_gathered(wire)
+        if verify == "mask":
+            return wire, ok
+        if verify == "raise":
+            if isinstance(ok, jax.core.Tracer):
+                raise ValueError(
+                    f"{what}: verify='raise' needs eager execution; use "
+                    f"verify='mask' inside jit/shard_map (DESIGN.md §12)")
+            if not bool(jnp.all(ok)):
+                raise A.WireIntegrityError(
+                    f"{what}: received wire failed its integrity "
+                    f"checksum (shard mask {ok.tolist()})")
+            return wire
+        raise ValueError(f"verify must be None, 'mask' or 'raise', "
+                         f"got {verify!r}")
+
+    def all_gather(self, wire, axis, *, verify=None):
         """All-gather any wire pytree over a mesh axis (call inside
         shard_map); every array leaf grows a leading axis of the axis
         size.  Static metadata (pipelines, stage chains) rides in the
-        pytree aux data untouched."""
-        return jax.tree.map(lambda a: jax.lax.all_gather(a, axis), wire)
+        pytree aux data untouched.  `verify` (§12) checks each received
+        shard's carried checksum: 'mask' returns (gathered, bool[p]),
+        'raise' raises eagerly on any mismatch — requires wires encoded
+        with integrity=True."""
+        gathered = jax.tree.map(lambda a: jax.lax.all_gather(a, axis), wire)
+        if self.fault is not None:
+            gathered = self.fault(gathered)
+        return self._verify_received(gathered, verify, "all_gather")
 
     def reduce_sum(self, enc: Encoded, pipe: Pipeline, n: int, axis):
         """Sum of every pod's decoded tensor over `axis` (call inside
@@ -231,16 +272,39 @@ class Transport:
         p = jax.lax.psum(1, axis)          # axis size (old-JAX compatible)
         return self.reduce_sum(enc, pipe, n, axis) / p
 
-    def send_pages(self, wire, src: int, dst: int, axis):
+    def send_pages(self, wire, src: int, dst: int, axis, *, verify=None):
         """Point-to-point: move a wire pytree from mesh rank `src` to
         `dst` along `axis` (call inside shard_map).  Rank `dst` receives
         `src`'s arrays bit-for-bit; every other rank receives zeros
         (ppermute semantics) — callers select the destination shard.
         This is the prefill→decode KV migration primitive: only the wire
-        arrays cross the link, never a dequantized plane."""
+        arrays cross the link, never a dequantized plane.
+
+        `verify='mask'` (§12) appends the received wire's checksum
+        verdict (a 0-d bool per shard — only rank `dst`'s verdict is
+        meaningful; the other ranks verify ppermute's zero fill)."""
         perm = [(src, dst)]
-        return jax.tree.map(
+        moved = jax.tree.map(
             lambda a: jax.lax.ppermute(a, axis, perm), wire)
+        if self.fault is not None:
+            moved = self.fault(moved)
+        if verify is None:
+            return moved
+        ok = A.verify_wire(moved)
+        if verify == "mask":
+            return moved, ok
+        if verify == "raise":
+            if isinstance(ok, jax.core.Tracer):
+                raise ValueError(
+                    "send_pages: verify='raise' needs eager execution; "
+                    "use verify='mask' inside jit/shard_map")
+            if not bool(ok):
+                raise A.WireIntegrityError(
+                    "send_pages: received wire failed its integrity "
+                    "checksum")
+            return moved
+        raise ValueError(f"verify must be None, 'mask' or 'raise', "
+                         f"got {verify!r}")
 
     # --- reduce internals -------------------------------------------------
 

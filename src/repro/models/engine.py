@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import QuantizerConfig
+from repro.core import audit as A
 from repro.core.transport import TRANSPORT, Transport
 from repro.compression import kv as KVC
 from . import serve as S
@@ -105,11 +106,21 @@ class DecodeEngine:
     `KV_PAGE_CHAINS` preset value or raw fragment), or "auto"/"auto:SET"
     to let the §11 selector pick per page at page close — `pack_kv`
     resolves it, so prefill/evict/stream_prefill wires all inherit the
-    choice and stay self-describing."""
+    choice and stay self-describing.
+
+    `integrity` (DESIGN.md §12) names a degradation policy
+    (`core.audit.DEGRADATION_POLICIES`: "raise" / "rerequest" / a
+    registered custom handler).  When set, every boundary wire the
+    engine emits carries the §12 checksum and `insert` re-verifies it:
+    a clean check bumps `stats()["audit_checks"]`, a failed one bumps
+    `audit_failures`, routes through the policy, and — unless the
+    policy raised — the insert is refused (returns False) so the
+    caller can re-request the pages."""
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int, seq: int,
                  kv_cfg: QuantizerConfig | None = None, stages="zero",
-                 transport: Transport | None = None):
+                 transport: Transport | None = None,
+                 integrity: str | None = None):
         assert seq % S.PAGE == 0, (seq, S.PAGE)
         assert cfg.family != "hybrid", "engine serves the QuantCache path"
         self.cfg, self.params = cfg, params
@@ -117,6 +128,9 @@ class DecodeEngine:
         self.kv_cfg = (KVC.kv_quantizer_config() if kv_cfg is None
                        else kv_cfg)
         self.stages = stages
+        self.integrity = integrity
+        if integrity is not None:
+            A.get_policy(integrity)          # fail fast on unknown names
         self.transport = TRANSPORT if transport is None else transport
         one = S.make_quant_cache(cfg, 1, seq)
         self._cache = jax.tree.map(
@@ -125,7 +139,10 @@ class DecodeEngine:
         self._tok = jnp.zeros((self.n_slots, 1, 1), jnp.int32)
         self.requests: list = [None] * self.n_slots   # host-side slot table
         self._stats = dict(prefill_tokens=0, generated_tokens=0, steps=0,
-                           wire_bytes=0.0, sends=0, inserts=0, evictions=0)
+                           wire_bytes=0.0, sends=0, inserts=0, evictions=0,
+                           audit_checks=0, audit_failures=0)
+        self._slot_audit = [dict(checks=0, failures=0)
+                            for _ in range(self.n_slots)]
         self._step1 = jax.jit(self._one_step)
         self._vstep = jax.jit(self._slots_step)
 
@@ -172,24 +189,61 @@ class DecodeEngine:
                                         prompt[i].reshape(1, 1),
                                         jnp.int32(i))
         nxt = jnp.argmax(logits, -1).astype(jnp.int32).reshape(1, 1)
-        wire = S.pack_cache(cache, stages=self.stages)
+        wire = self._seal(S.pack_cache(cache, stages=self.stages))
         self._stats["prefill_tokens"] += m
         return PrefillResult(wire, nxt, logits, m)
 
-    def insert(self, slot: int, pre: PrefillResult, *, request=True):
+    def _seal(self, wire: S.PackedCache) -> S.PackedCache:
+        """Attach the §12 checksum to both wire planes (integrity on)."""
+        if self.integrity is None:
+            return wire
+        return wire._replace(k=A.attach_checksum(wire.k),
+                             v=A.attach_checksum(wire.v))
+
+    def _verify_pages(self, slot: int, pages: S.PackedCache) -> bool:
+        """§12 receive-side check: re-verify any carried checksum on the
+        K/V wire planes.  Clean → True.  On mismatch the failure is
+        counted (engine-wide and per slot) and routed through the
+        configured degradation policy; returns False unless the policy
+        raised."""
+        ok = True
+        for name, plane in (("k", pages.k), ("v", pages.v)):
+            if not A.has_checksum(plane):
+                continue
+            self._stats["audit_checks"] += 1
+            self._slot_audit[slot]["checks"] += 1
+            if bool(A.verify_wire(plane)):
+                continue
+            ok = False
+            self._stats["audit_failures"] += 1
+            self._slot_audit[slot]["failures"] += 1
+            A.get_policy(self.integrity or "raise")(dict(
+                site="engine.insert", slot=slot, plane=name,
+                what="PackedCache"))
+        return ok
+
+    def insert(self, slot: int, pre: PrefillResult, *, request=True) -> bool:
         """Insert a prefilled/evicted request into `slot`.  The wire
         decodes through the exact §7/§9 page-chain inverses
         (`unpack_cache`), so the slot history is bit-identical to the
         source cache and subsequent logits are bit-identical to the
         single-request path.  Accounts the wire via
-        `Transport.bytes_moved(op='send_pages')`."""
+        `Transport.bytes_moved(op='send_pages')`.
+
+        Returns True on success.  With checksummed wires (§12), a failed
+        check routes through the `integrity` policy first; if it returns
+        (rerequest-style policies), the slot is left free and this
+        returns False so the caller can fetch the pages again."""
         assert self.requests[slot] is None, f"slot {slot} is live"
         assert isinstance(pre.pages.k, KVC.PackedKV), type(pre.pages.k)
         assert isinstance(pre.pages.v, KVC.PackedKV), type(pre.pages.v)
         self._account(pre.pages)
+        if not self._verify_pages(slot, pre.pages):
+            return False
         self.insert_cache(slot, S.unpack_cache(pre.pages),
                           next_token=pre.next_token, pos=pre.pos,
                           request=request)
+        return True
 
     def insert_cache(self, slot: int, cache1: S.QuantCache, *,
                      next_token, pos: int, request=True):
@@ -232,7 +286,7 @@ class DecodeEngine:
         into any engine bit-exactly."""
         assert self.requests[slot] is not None, f"slot {slot} is free"
         cache1 = jax.tree.map(lambda full: full[slot], self._cache)
-        wire = S.pack_cache(cache1, stages=self.stages)
+        wire = self._seal(S.pack_cache(cache1, stages=self.stages))
         out = PrefillResult(wire, self._tok[slot], None,
                             int(self._pos[slot]))
         self._account(wire)
@@ -259,7 +313,9 @@ class DecodeEngine:
         return 2 * self.cfg.n_layers * self.seq * g * hd * 2
 
     def stats(self) -> dict:
-        return dict(self._stats)
+        out = dict(self._stats)
+        out["slot_audit"] = [dict(d) for d in self._slot_audit]
+        return out
 
     # --- reference scheduler ----------------------------------------------
 

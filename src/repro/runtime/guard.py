@@ -1,0 +1,184 @@
+"""Fault-injection harness for the §12 guarantee-audit plane.
+
+The audit subsystem (`core/audit.py`) makes two promises: the carried
+checksum catches silent wire corruption, and `verify=` catches
+bound/non-finite violations at decode cost.  Promises need adversaries —
+this module is the deterministic corruption side of that contract, used
+by `benchmarks/audit_bench.py` and `tests/test_audit.py` to prove
+detection coverage over every registry preset:
+
+    plan = FaultPlan("gradsmooth", "payload_bitflip")
+    bad  = plan.corrupt_wire(wire)          # wire from encode(integrity=True)
+    assert not bool(audit.verify_wire(bad))
+
+Five fault classes (`FAULT_CLASSES`):
+
+  payload_bitflip  flip one bit of one transmitted payload word
+  header_bitflip   flip one bit of a header plane (falls back to the
+                   outlier-count / eb2 plane on header-free chains)
+  length_truncate  halve the transmitted `payload_len` and zero the tail
+                   (models a cut-short transfer; the checksum covers the
+                   length plane, so this is caught even when the dropped
+                   words were already zero)
+  chainid_swap     rotate the per-wire/per-page chain id to another
+                   VALID id (silent mis-dispatch; selector wires only)
+  nan_input        corrupt the *input* before encode — caught by the
+                   `verify=` audit report (`n_nonfinite > 0`), not the
+                   checksum, which by design covers the wire, not x
+
+Determinism mirrors `benchmarks/datasets.py`: every plan seeds
+`np.random.default_rng` from `zlib.crc32` of its suite/class name, so
+fault positions reproduce across processes without PYTHONHASHSEED.
+Corruption is host-side numpy on leaf copies — the original wire pytree
+is never mutated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import audit
+
+FAULT_CLASSES = ("payload_bitflip", "header_bitflip", "length_truncate",
+                 "chainid_swap", "nan_input")
+
+
+def _swap_leaf(wire, old_leaf, new_arr):
+    """Rebuild `wire` with `old_leaf` (matched by identity) replaced."""
+    flat, treedef = jax.tree_util.tree_flatten(wire)
+    hits = [i for i, f in enumerate(flat) if f is old_leaf]
+    assert len(hits) == 1, f"leaf identity match found {len(hits)} leaves"
+    flat[hits[0]] = jnp.asarray(new_arr)
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def applicable_classes(wire) -> tuple:
+    """The wire-corruption classes that apply to this wire shape.
+    `chainid_swap` needs a transmitted chain id (selector wires and
+    selected `PackedKV`s); `nan_input` is an input fault, never a wire
+    fault, so it is not listed here — harnesses add it via
+    `FaultPlan.corrupt_input` + the encode-side audit report."""
+    out = ["payload_bitflip", "header_bitflip", "length_truncate"]
+    if getattr(wire, "chain_id", None) is not None:
+        out.append("chainid_swap")
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One deterministic corruption: (suite, fault class) → positions.
+
+    `n_chains` bounds `chainid_swap` so the swapped id stays a valid
+    dispatch target (the silent-corruption model: decode succeeds, the
+    bits are wrong, only the checksum knows)."""
+    suite: str
+    cls: str
+    n_chains: int = 2
+
+    def __post_init__(self):
+        assert self.cls in FAULT_CLASSES, self.cls
+
+    def rng(self) -> np.random.Generator:
+        return np.random.default_rng(
+            zlib.crc32(f"fault:{self.suite}:{self.cls}".encode()))
+
+    # --- input faults -----------------------------------------------------
+
+    def corrupt_input(self, x) -> jnp.ndarray:
+        """`nan_input`: plant NaN/±Inf in the pre-encode input.  The §12
+        audit report (encode(verify=True)) must show n_nonfinite > 0."""
+        assert self.cls == "nan_input", self.cls
+        a = np.asarray(x, np.float32).copy()
+        r = self.rng()
+        idx = r.choice(a.size, size=min(3, a.size), replace=False)
+        vals = [np.nan, np.inf, -np.inf]
+        for i, j in enumerate(idx):
+            a.flat[j] = vals[i % 3]
+        return jnp.asarray(a)
+
+    # --- wire faults ------------------------------------------------------
+
+    def corrupt_wire(self, wire):
+        """Apply this plan's wire fault to a copy of `wire` (any of
+        `Encoded` / `SelectedWire` / `PackedKV`)."""
+        assert self.cls != "nan_input", "nan_input corrupts x, not wires"
+        assert self.cls in applicable_classes(wire), (
+            f"{self.cls} not applicable to {type(wire).__name__}")
+        return getattr(self, f"_{self.cls}")(wire)
+
+    def _payload_bitflip(self, wire):
+        r = self.rng()
+        pay = np.asarray(wire.payload).copy()
+        plen = np.asarray(wire.payload_len).reshape(-1)
+        rows = pay.reshape(-1, pay.shape[-1])
+        row = int(r.integers(0, rows.shape[0]))
+        limit = int(plen[row]) if plen.size == rows.shape[0] else int(plen[0])
+        col = int(r.integers(0, max(limit, 1)))
+        rows[row, col] ^= np.uint32(1) << np.uint32(r.integers(0, 32))
+        return _swap_leaf(wire, wire.payload, pay)
+
+    def _header_plane(self, wire):
+        """First non-empty header plane, else the accounting plane every
+        wire shape carries (n_outliers / eb2)."""
+        planes = getattr(wire, "headers", None)
+        if planes is None:                # SelectedWire: one flat plane
+            h = getattr(wire, "header", None)
+            planes = () if h is None else (h,)
+        for p in planes:
+            if p is not None and np.asarray(p).size:
+                return p
+        fallback = getattr(wire, "n_outliers", None)
+        if fallback is None:
+            fallback = wire.eb2                       # PackedKV
+        return fallback
+
+    def _header_bitflip(self, wire):
+        r = self.rng()
+        leaf = self._header_plane(wire)
+        a = np.asarray(leaf).copy()
+        view = a.reshape(a.size).view(np.uint8)   # reshape: 0-d scalars too
+        byte = int(r.integers(0, view.size))
+        view[byte] ^= np.uint8(1) << np.uint8(r.integers(0, 8))
+        return _swap_leaf(wire, leaf, a)
+
+    def _length_truncate(self, wire):
+        pay = np.asarray(wire.payload).copy()
+        plen = np.asarray(wire.payload_len).copy()
+        new = plen // 2
+        rows = pay.reshape(-1, pay.shape[-1])
+        lens = (new.reshape(-1) if new.size == rows.shape[0]
+                else np.full(rows.shape[0], int(new.reshape(-1)[0])))
+        mask = np.arange(rows.shape[-1])[None, :] < lens[:, None]
+        rows *= mask.astype(rows.dtype)
+        out = _swap_leaf(wire, wire.payload, pay)
+        return _swap_leaf(out, out.payload_len, new)
+
+    def _chainid_swap(self, wire):
+        cid = np.asarray(wire.chain_id).copy()
+        n = max(int(self.n_chains), 2)
+        cid = ((cid.astype(np.int64) + 1) % n).astype(cid.dtype)
+        return _swap_leaf(wire, wire.chain_id, cid)
+
+
+def detection_matrix(wire, *, suite: str = "smoke", n_chains: int = 2,
+                     report=None) -> dict:
+    """Run every applicable wire fault against `wire` (which must carry
+    a §12 checksum) and return {fault class: detected?}.  Detection is
+    the checksum verdict: `verify_wire(corrupted)` must come back False.
+    When an `AuditReport` from a nan-corrupted encode is given, the
+    `nan_input` row is judged from it (`n_nonfinite > 0`)."""
+    if not audit.has_checksum(wire):
+        raise ValueError("detection_matrix needs encode(integrity=True) "
+                         "wires — no checksum carried")
+    assert bool(audit.verify_wire(wire)), "clean wire failed its checksum"
+    out = {}
+    for cls in applicable_classes(wire):
+        bad = FaultPlan(suite, cls, n_chains=n_chains).corrupt_wire(wire)
+        out[cls] = not bool(audit.verify_wire(bad))
+    if report is not None:
+        out["nan_input"] = int(report.n_nonfinite) > 0
+    return out

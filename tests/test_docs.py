@@ -179,6 +179,49 @@ def test_design_documents_the_selector():
     assert "§11" in readme
 
 
+def test_design_documents_the_audit_plane():
+    """§12 is the guarantee-audit contract: the runtime surface
+    (`AuditReport`/`wire_checksum`/`verify_wire`/`attach_checksum`), the
+    degradation-policy registry and its three built-ins, the length
+    guard, and the fault-plan grammar (every `guard.FAULT_CLASSES` name)
+    must all appear in DESIGN.md §12 — and §4/§7/§8/§11 must cross-link
+    to it (the checksum covers the §4 planes, rides the §7/§11 encode
+    opt-ins, and is enforced on the §8 receive leg), plus the README
+    architecture map must carry its row."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core import audit
+    from repro.runtime import guard
+
+    _, text = _design_sections()
+    assert "## §12" in text
+    sec12 = text.split("## §12", 1)[1]
+    for name in ("AuditReport", "audit_report", "wire_checksum",
+                 "attach_checksum", "verify_wire", "verify_gathered",
+                 "check_payload_len", "WireIntegrityError",
+                 "DEGRADATION_POLICIES", "register_policy", "FaultPlan",
+                 "detection_matrix", "BENCH_audit.json"):
+        assert name in sec12, (
+            f"{name!r} is undocumented in DESIGN.md §12")
+    for cls in guard.FAULT_CLASSES:          # the fault-plan grammar
+        assert f"`{cls}`" in sec12, (
+            f"fault class {cls!r} is undocumented in DESIGN.md §12")
+    for policy in audit.DEGRADATION_POLICIES:
+        assert f"`{policy}`" in sec12, (
+            f"degradation policy {policy!r} is undocumented in §12")
+    assert "verify=True" in sec12 and "integrity=True" in sec12
+    assert "bit-identical" in sec12          # checksum-as-aux placement
+    assert "false positives" in sec12
+    # §4/§7/§8/§11 each cross-link the audit section
+    for n in (4, 7, 8, 11):
+        body = text.split(f"## §{n}", 1)[1].split(f"## §{n + 1}", 1)[0]
+        assert "§12" in body, f"DESIGN.md §{n} does not cross-link §12"
+    readme = (REPO / "README.md").read_text()
+    assert "core/audit.py" in readme
+    assert "runtime/guard.py" in readme
+    assert "§12" in readme
+
+
 def test_registry_selector_sets_resolve():
     """Every SELECTOR_SETS entry must build: full-pipeline sets through
     `get_selector`, page-fragment sets (base None) through
