@@ -31,7 +31,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
+import textwrap
 import time
 
 import numpy as np
@@ -144,7 +146,7 @@ def detection(smoke: bool) -> list:
                                    True))
 
     # KV page chains: static presets + the per-page auto selector
-    r = np.random.default_rng(11)
+    r = datasets._rng("audit-kv-cache")
     s = 256 if smoke else 1024
     cache = r.standard_normal((2, 2, s, 64)).astype(np.float32)
     cache[:, :, int(s * 0.6):, :] = 0.0
@@ -158,7 +160,92 @@ def detection(smoke: bool) -> list:
     rows.append(_detection_row(
         "kv", "auto:kv-page",
         guard.detection_matrix(p, suite="kv-page", n_chains=3), True))
+    rows.append(ring_detection())
     return rows
+
+
+# in-flight §12 coverage: the per-hop plane checksums of the verified
+# ring reduce (Transport.reduce_mean(integrity='drop')) against a
+# `hop_bitflip` fault hook.  Runs in a subprocess so XLA_FLAGS can
+# emulate a 2-device mesh regardless of this process's backend state.
+_RING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compression.grads import GradCompressionConfig, compress_shard
+    from repro.core.transport import TRANSPORT, Transport
+    from repro.runtime.guard import FaultPlan
+
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = jax.make_mesh((2,), ("pod",))
+    if hasattr(jax, "shard_map"):
+        def smap(f):
+            return jax.shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                                 out_specs=(P("pod", None), P("pod")),
+                                 axis_names={"pod"}, check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def smap(f):
+            return _shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                              out_specs=(P("pod", None), P("pod")),
+                              check_rep=False)
+
+    # bin_bits=16 keeps the shards outlier-free so the §8 ring fires
+    # (outliers would route the reduce to the gather fallback instead)
+    cfg = GradCompressionConfig(eb_rel=2.0 ** -6, bin_bits=16,
+                                outlier_cap_frac=1 / 16)
+    pipe, n = cfg.pipe(), 4096
+
+    def run(tp, g):
+        def f(v):
+            shard, _ = compress_shard(v, cfg, integrity=True)
+            mean, nv = tp.reduce_mean(shard.enc, pipe, n, "pod",
+                                      integrity="drop", return_valid=True)
+            return mean, nv[None]
+        gd = jax.device_put(jnp.asarray(g),
+                            NamedSharding(mesh, P("pod", None)))
+        mean, nv = jax.jit(smap(f))(gd)
+        return np.asarray(mean), np.asarray(nv).tolist()
+
+    r = np.random.default_rng(__import__("zlib").crc32(b"ring-hop"))
+    g = np.broadcast_to((r.standard_normal(n) * 1e-2).astype(np.float32),
+                        (2, n)).copy()
+    mean_c, valid_c = run(TRANSPORT, g)
+    plan = FaultPlan("ring", "hop_bitflip")
+    mean_f, valid_f = run(Transport(fault=plan.corrupt_hop), g)
+    print("CLEAN", *valid_c)
+    print("FAULT", *valid_f)
+    assert np.all(np.isfinite(mean_f))
+""")
+
+
+def ring_detection() -> dict:
+    """`hop_bitflip` row: clean ring keeps every contribution (no false
+    positives); a corrupted hop is dropped on every receiving rank."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _RING_SCRIPT], capture_output=True,
+        text=True, env={**os.environ, "PYTHONPATH": os.path.join(
+            os.path.dirname(__file__), "..", "src")})
+    if proc.returncode != 0:
+        print(proc.stdout + proc.stderr, file=sys.stderr)
+        return _detection_row("transport", "ring:reduce_mean",
+                              {"hop_bitflip": False}, False)
+    lines = dict(ln.split(" ", 1) for ln in
+                 proc.stdout.strip().splitlines() if " " in ln)
+    clean = [int(v) for v in lines.get("CLEAN", "").split()]
+    fault = [int(v) for v in lines.get("FAULT", "").split()]
+    clean_ok = clean == [2, 2]
+    detected = bool(fault) and all(v < 2 for v in fault)
+    return _detection_row("transport", "ring:reduce_mean",
+                          {"hop_bitflip": detected}, clean_ok)
 
 
 def overhead(smoke: bool) -> list:

@@ -27,6 +27,7 @@ import json
 import os
 import sys
 import time
+import zlib
 
 if "--stream" in sys.argv:                  # must precede the jax import
     _flags = os.environ.get("XLA_FLAGS", "")
@@ -159,7 +160,7 @@ def main():
     bundle = build(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
     stages = get_kv_chain(args.stages)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(zlib.crc32(b"engine-prompts"))
     prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len)
                .astype(np.int32) for _ in range(args.requests)]
 

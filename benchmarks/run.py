@@ -226,7 +226,7 @@ def table9():
 
 def ckpt():
     """Checkpoint codec: LC-serialized f32 master weights vs raw."""
-    r = np.random.default_rng(0)
+    r = datasets._rng("ckpt-weights")
     w = (r.standard_normal(1 << 21) * 0.02).astype(np.float32)
     for eb in (1e-5, 1e-6, 1e-7):
         cfg = QuantizerConfig(mode="abs", error_bound=eb)
@@ -241,7 +241,7 @@ def kv():
     the packed wire form a cache migration would ship."""
     from repro.compression.kv import (dequantize_kv, kv_quantizer_config,
                                       kv_wire_bytes, pack_kv, quantize_kv)
-    r = np.random.default_rng(1)
+    r = datasets._rng("kv-cache")
     k = jnp.asarray(r.standard_normal((2, 4, 1024, 128)).astype(np.float32))
     cfg = kv_quantizer_config()
     t0 = time.perf_counter()
@@ -293,7 +293,7 @@ def packedwire():
     """
     from repro.core import (decode_packed, encode_compact, encode_packed,
                             packed_word_count)
-    r = np.random.default_rng(3)
+    r = datasets._rng("packed-wire")
     n = 1 << 22
     x = jnp.asarray((r.standard_normal(n) * 0.02).astype(np.float32))
     for bb in (8, 16):
@@ -484,7 +484,7 @@ def lossless(pipeline: str | None = None, smoke: bool = False):
 
     # KV: tail pages unwritten (zeros) — the migration wire drops them,
     # and `ent` squeezes the written pages below narrow's byte floor
-    r = np.random.default_rng(7)
+    r = datasets._rng("kv-tail-pages")
     cache = r.standard_normal((2, 4, 1024, 64)).astype(np.float32)
     cache[:, :, 600:, :] = 0.0
     q = quantize_kv(jnp.asarray(cache), kv_quantizer_config())
@@ -531,7 +531,7 @@ def transfer(smoke: bool = False):
     # [L, B, G, S, hd] serving-cache shape (reduced-model scale on CPU)
     l_, b, g_, s, hd = (2, 2, 2, 512, 64) if smoke else (4, 4, 4, 2048, 64)
     reps = 1 if smoke else 3
-    r = np.random.default_rng(17)
+    r = datasets._rng("serve-cache")
     kv_cfg = kv_quantizer_config()
 
     for load, written in (("midstream", 0.6), ("full", 1.0)):

@@ -1,0 +1,38 @@
+"""Guarantee linter (DESIGN.md §13): static contract analysis over the
+stages, registries, kernels, and accounting of the LC reproduction.
+
+The paper's core lesson is that error-bound violations come from a
+small set of recurring code-level pitfalls — overflow in the
+reconstruction check, mishandled non-finite values, silent accounting
+drift — that slip in as a compressor grows.  This repo re-learned
+several of them the hard way (PR 1's ABS recon-overflow, PR 5's f32
+accounting drift past 2^24 words, PR 9's TIGHTEN-vs-plain-bound
+gotcha).  PR 9 made the guarantee observable at runtime; this package
+makes it checkable *statically*, in CI, before any kernel runs.
+
+Two layers, both gated via `python -m repro.analysis`:
+
+  Layer 1 (`walker` + `rules`)  a stdlib-`ast` lint engine with a
+      pluggable rule registry (`RULES`, mirroring the `STAGES`
+      pattern).  Rules GL001-GL007 each encode one learned lesson; see
+      DESIGN.md §13 for the table.  Pure stdlib — importable and
+      runnable with no JAX devices.
+
+  Layer 2 (`contracts` + `dispatch`)  a registry contract checker that
+      IMPORTS the package and verifies cross-artifact invariants no
+      single unit test pins as a set: stage encode/decode pairing and
+      header accounting, preset/selector/KV-chain parseability, the
+      DESIGN.md §7 dispatch table against `kernel_dispatch`'s actual
+      routing, degradation-policy reachability, fault-class coverage
+      in BENCH_audit.json, and §13 documentation of every registered
+      rule.
+
+Findings carry a rule id, file:line, and a fix hint; suppress per file
+with `# repro: noqa GL00x -- reason` (the reason is mandatory — a bare
+noqa is itself a finding).  The committed `analysis-baseline.json`
+holds accepted findings (empty: the tree is clean); the CLI exits
+nonzero on anything new.
+"""
+from .walker import (Finding, RULES, register_rule, lint_file,  # noqa: F401
+                     lint_paths)
+from . import rules as _rules  # noqa: F401  (registers GL001-GL007)

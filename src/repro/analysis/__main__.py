@@ -1,0 +1,79 @@
+"""CLI gate: `python -m repro.analysis [--format json]` — exits nonzero
+on any finding not in the committed baseline (DESIGN.md §13).
+
+Layer 1 (AST lint) always runs and needs no JAX; Layer 2 (registry
+contracts) imports the package on the CPU backend — skip it with
+--no-contracts for a pure-stdlib run.  The default lint scope is
+src/repro + benchmarks relative to the repo root (resolved from this
+file, so the gate works from any cwd).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import lint_paths
+from . import report as R
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_PATHS = ("src/repro", "benchmarks")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS} "
+                         f"under the repo root)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline",
+                    default=str(REPO_ROOT / R.BASELINE_NAME),
+                    help="accepted-findings file (default: committed "
+                         "analysis-baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings into the baseline "
+                         "and exit 0")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip Layer 2 (no repro/jax import; pure stdlib)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip Layer 1 (contracts only)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (Layer 1)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+
+    paths = args.paths or [REPO_ROOT / p for p in DEFAULT_PATHS]
+    findings = []
+    if not args.no_lint:
+        rules = args.rules.split(",") if args.rules else None
+        findings += lint_paths(paths, rules=rules)
+    if not args.no_contracts:
+        from . import contracts
+        findings += contracts.run_contracts(REPO_ROOT)
+
+    # repo-relative paths in output, wherever the gate ran from
+    rel = []
+    for f in findings:
+        try:
+            p = str(Path(f.path).resolve().relative_to(REPO_ROOT))
+        except ValueError:
+            p = f.path
+        rel.append(type(f)(f.rule, p, f.line, f.message, f.hint))
+    findings = rel
+
+    if args.write_baseline:
+        R.write_baseline(args.baseline, findings)
+        print(f"baseline written: {len(findings)} accepted finding(s) "
+              f"-> {args.baseline}")
+        return 0
+
+    new, old = R.split_new(findings, R.load_baseline(args.baseline))
+    out = (R.render_json if args.format == "json" else R.render_text)(
+        new, old)
+    print(out)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,283 @@
+"""Layer-2 registry contract checker (DESIGN.md §13): IMPORT the
+package and verify the cross-artifact invariants no single unit test
+pins as a set.
+
+Contracts (finding ids RC001-RC008):
+
+  RC001  every `STAGES` entry parses bare, declares the full word-stage
+         contract (encode/decode pair + capacity/header accounting +
+         transmits_len), and roundtrips a small word plane exactly
+  RC002  every `PIPELINES` preset parses and spec-roundtrips
+  RC003  every `KV_PAGE_CHAINS` chain resolves through the two-domain
+         fragment grammar
+  RC004  every `SELECTOR_SETS` member constructs (scoreable) or its
+         rejection is documented in DESIGN.md §11
+  RC005  the DESIGN.md §7 dispatch table matches `kernel_dispatch`'s
+         actual routing (analysis/dispatch.py)
+  RC006  every `DEGRADATION_POLICIES` name is reachable from a consumer
+         outside core/audit.py
+  RC007  every `FaultPlan` class appears in BENCH_audit.json's
+         detection matrix
+  RC008  every registered lint rule id is documented in DESIGN.md §13
+
+This layer imports repro (and therefore jax) lazily, per check — the
+CPU backend suffices and no accelerator devices are touched, so the CI
+gate runs on the plain runner.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import zlib
+from pathlib import Path
+
+from .walker import Finding, RULES
+from . import dispatch as D
+
+_REG = "src/repro/configs/registry.py"
+
+
+def check_stages() -> list:
+    """RC001: the word-stage registry contract."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import pipeline as PL
+
+    findings, path = [], "src/repro/core/pipeline.py"
+    contract = ("encode_words", "decode_words", "capacity_words",
+                "header_words", "header_content_bits", "spec")
+    n = 1024
+    for name, parser in sorted(PL.STAGES.items()):
+        try:
+            st = parser(name, [], 16)
+        except Exception as e:
+            findings.append(Finding(
+                "RC001", path, 1,
+                f"stage {name!r} does not parse bare: {e}",
+                "every registered stage must build from its plain name"))
+            continue
+        missing = [a for a in contract if not callable(getattr(st, a, None))]
+        if not hasattr(st, "transmits_len"):
+            missing.append("transmits_len")
+        if missing:
+            findings.append(Finding(
+                "RC001", path, 1,
+                f"stage {name!r} is missing contract members "
+                f"{missing} (exact encode/decode pair + header "
+                f"accounting)", "implement the full word-stage "
+                "contract (core/pipeline.py stage classes)"))
+            continue
+        try:
+            rng = np.random.default_rng(zlib.crc32(name.encode()))
+            words = jnp.asarray(
+                rng.integers(0, 256, size=n).astype(np.uint32))
+            hdr, payload, plen = st.encode_words(words, n)
+            cap = st.capacity_words(n)
+            if int(payload.size) != cap:
+                findings.append(Finding(
+                    "RC001", path, 1,
+                    f"stage {name!r}: stored payload plane "
+                    f"({int(payload.size)} words) != declared "
+                    f"capacity_words ({cap})",
+                    "capacity_words must describe the stored plane"))
+            if int(hdr.size) != st.header_words(n):
+                findings.append(Finding(
+                    "RC001", path, 1,
+                    f"stage {name!r}: stored header plane "
+                    f"({int(hdr.size)} words) != declared header_words "
+                    f"({st.header_words(n)})",
+                    "header_words must describe the stored plane"))
+            if st.header_content_bits(n) > 32 * max(st.header_words(n), 0) \
+                    and st.header_words(n):
+                findings.append(Finding(
+                    "RC001", path, 1,
+                    f"stage {name!r}: header_content_bits exceeds the "
+                    f"stored header plane", "content bits are what a "
+                    "transport moves; they cannot exceed storage"))
+            back = st.decode_words(hdr, payload, n)
+            if not bool(jnp.array_equal(back, words)):
+                findings.append(Finding(
+                    "RC001", path, 1,
+                    f"stage {name!r}: decode_words is not the exact "
+                    f"inverse of encode_words on a {n}-word plane",
+                    "the §6 contract is bit-exact roundtrip"))
+            if not st.transmits_len and int(plen) != cap:
+                findings.append(Finding(
+                    "RC001", path, 1,
+                    f"stage {name!r}: transmits_len=False but encode "
+                    f"returned len {int(plen)} != capacity {cap}",
+                    "length-static stages transmit the full plane"))
+        except Exception as e:
+            findings.append(Finding(
+                "RC001", path, 1,
+                f"stage {name!r} roundtrip raised: {type(e).__name__}: "
+                f"{e}", "the bare stage must encode/decode a plain "
+                "word plane"))
+    return findings
+
+
+def check_pipelines() -> list:
+    """RC002: every preset parses and spec-roundtrips."""
+    from repro.configs.registry import PIPELINES, get_pipeline
+    from repro.core.pipeline import parse_pipeline
+
+    findings = []
+    for name in sorted(PIPELINES):
+        try:
+            pipe = parse_pipeline(get_pipeline(name))
+            if parse_pipeline(pipe.spec()) != pipe:
+                findings.append(Finding(
+                    "RC002", _REG, 1,
+                    f"preset {name!r} does not spec-roundtrip",
+                    "spec() and parse_pipeline must be inverses"))
+        except Exception as e:
+            findings.append(Finding(
+                "RC002", _REG, 1,
+                f"preset {name!r} does not parse: {e}",
+                "every PIPELINES entry must parse_pipeline"))
+    return findings
+
+
+def check_kv_chains() -> list:
+    """RC003: every KV page chain resolves through the fragment grammar."""
+    from repro.configs.registry import KV_PAGE_CHAINS, get_kv_chain
+    from repro.compression import kv
+
+    findings = []
+    for name in sorted(KV_PAGE_CHAINS):
+        try:
+            pred, word = kv._page_stages(get_kv_chain(name))
+            _ = pred, word
+        except Exception as e:
+            findings.append(Finding(
+                "RC003", _REG, 1,
+                f"KV page chain {name!r} does not resolve: {e}",
+                "every KV_PAGE_CHAINS fragment must split into "
+                "pred|word stages (compression/kv.py)"))
+    return findings
+
+
+def check_selector_sets(design_text: str) -> list:
+    """RC004: every selector-set member is scoreable (constructs) or its
+    rejection is documented in DESIGN.md §11."""
+    from repro.configs.registry import SELECTOR_SETS
+    from repro.core import select as SEL
+
+    sec11 = design_text.split("## §11", 1)[1].split("## §12", 1)[0] \
+        if "## §11" in design_text else ""
+    findings = []
+    for name, entry in sorted(SELECTOR_SETS.items()):
+        if len(entry["bias"]) != len(entry["chains"]):
+            findings.append(Finding(
+                "RC004", _REG, 1,
+                f"selector set {name!r}: bias has {len(entry['bias'])} "
+                f"entries for {len(entry['chains'])} chains",
+                "one calibration bias per candidate chain"))
+        try:
+            sel = (SEL.get_kv_selector(name) if entry["base"] is None
+                   else SEL.get_selector(name))
+            if len(sel.chains) != len(entry["chains"]):
+                findings.append(Finding(
+                    "RC004", _REG, 1,
+                    f"selector set {name!r}: built {len(sel.chains)} "
+                    f"candidates from {len(entry['chains'])} registered "
+                    f"chains", "construction must keep every member"))
+        except Exception as e:
+            # documented-rejected: §11 must name the offending token
+            tokens = {t.split(":")[0] for c in entry["chains"]
+                      for t in c.split("|") if t}
+            documented = any(tok and tok in str(e) and tok in sec11
+                             for tok in tokens)
+            if not documented:
+                findings.append(Finding(
+                    "RC004", _REG, 1,
+                    f"selector set {name!r} does not construct and the "
+                    f"rejection is undocumented in §11: {e}",
+                    "make the member scoreable or document the "
+                    "rejection (the `shuffle` pattern, DESIGN.md §11)"))
+    return findings
+
+
+def check_policies(repo_root: Path) -> list:
+    """RC006: every degradation policy is reachable from a consumer —
+    its name appears as a string constant at some call site outside
+    core/audit.py.  Policy names are passed IN by callers (`integrity=`
+    args route through `get_policy`), so tests/examples/benchmarks are
+    consumer sites too."""
+    from repro.core.audit import DEGRADATION_POLICIES
+
+    used = set()
+    for root in ("src/repro", "tests", "examples", "benchmarks"):
+        for py in sorted((repo_root / root).rglob("*.py")):
+            if py.name == "audit.py" or "analysis" in py.parts:
+                continue
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError:
+                continue
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Constant) and \
+                        isinstance(node.value, str):
+                    used.add(node.value)
+    return [Finding(
+        "RC006", "src/repro/core/audit.py", 1,
+        f"degradation policy {name!r} has no consumer outside "
+        f"core/audit.py", "wire the policy into a receive site (or "
+        "drop it from DEGRADATION_POLICIES)")
+        for name in sorted(DEGRADATION_POLICIES) if name not in used]
+
+
+def check_fault_classes(bench_path: Path) -> list:
+    """RC007: every FaultPlan class is pinned in BENCH_audit.json's
+    detection matrix."""
+    from repro.runtime.guard import FAULT_CLASSES
+
+    if not bench_path.exists():
+        return [Finding(
+            "RC007", str(bench_path), 1,
+            "BENCH_audit.json is missing — the detection matrix is the "
+            "committed proof of fault coverage",
+            "run benchmarks.audit_bench to regenerate it")]
+    doc = json.loads(bench_path.read_text())
+    pinned = set()
+    for row in doc.get("detection", []):
+        pinned |= set(row.get("matrix", {}))
+    return [Finding(
+        "RC007", str(bench_path.name), 1,
+        f"fault class {cls!r} is not pinned in BENCH_audit.json's "
+        f"detection matrix", "add a detection row exercising the class "
+        "(benchmarks/audit_bench.py)")
+        for cls in FAULT_CLASSES if cls not in pinned]
+
+
+def check_rule_docs(design_text: str) -> list:
+    """RC008: every registered lint rule id is documented in §13."""
+    sec13 = design_text.split("## §13", 1)[1].split("\n## §", 1)[0] \
+        if "## §13" in design_text else ""
+    if not sec13:
+        return [Finding(
+            "RC008", "DESIGN.md", 1,
+            "DESIGN.md has no §13 (the guarantee-linter contract)",
+            "add §13 with the rule table (one row per registered id)")]
+    return [Finding(
+        "RC008", "DESIGN.md", 1,
+        f"lint rule {rid} is registered but undocumented in §13",
+        "add the rule's row (lesson + PR) to the §13 table")
+        for rid in sorted(RULES) if rid not in sec13]
+
+
+def run_contracts(repo_root) -> list:
+    """Run every Layer-2 contract; returns the combined findings."""
+    root = Path(repo_root)
+    design = (root / "DESIGN.md").read_text() \
+        if (root / "DESIGN.md").exists() else ""
+    findings = []
+    findings += check_stages()
+    findings += check_pipelines()
+    findings += check_kv_chains()
+    findings += check_selector_sets(design)
+    findings += D.check_dispatch(D.parse_dispatch_table(design))
+    findings += check_policies(root)
+    findings += check_fault_classes(root / "BENCH_audit.json")
+    findings += check_rule_docs(design)
+    return findings

@@ -1,0 +1,140 @@
+"""DESIGN.md §7 dispatch-table checker: the doc's kernel-routing table
+vs `Pipeline.kernel_dispatch`'s ACTUAL routing.
+
+Until this module, only prose kept the §7 table and the dispatch code in
+sync — a fused kernel could land (or an open slot close) without the
+table moving, and the docs would quietly lie about which chains hit
+Pallas.  The checker parses the markdown table, maps each row to
+representative probe chains, and asserts the row's claimed kernel (a
+`kernels/x.py::fn` path, or "open slot"/"jit reference" meaning None)
+equals what `parse_pipeline(probe).kernel_dispatch()` returns.
+
+`parse_dispatch_table` + `check_dispatch` are separable so tests can
+feed a deliberately desynced table and assert detection (the seeded-
+desync test in tests/test_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from .walker import Finding
+
+_TABLE_ANCHOR = "**Kernel dispatch.**"
+
+
+@dataclasses.dataclass(frozen=True)
+class Row:
+    """One §7 table row: the chain-pattern cell and the kernel cell,
+    markdown unescaped (`\\|` -> `|`, backticks stripped)."""
+    chain: str
+    kernel: str
+
+
+def _clean(cell: str) -> str:
+    return cell.replace("\\|", "|").replace("`", "").strip()
+
+
+def parse_dispatch_table(text: str) -> list:
+    """Extract the kernel-dispatch rows from DESIGN.md §7 (or any text
+    holding the anchored markdown table)."""
+    if _TABLE_ANCHOR not in text:
+        return []
+    body = text.split(_TABLE_ANCHOR, 1)[1]
+    rows = []
+    for line in body.splitlines():
+        line = line.strip()
+        if rows and not line.startswith("|"):
+            break                              # table ended
+        if not line.startswith("|"):
+            continue
+        # split on unescaped pipes only (`\|` is a literal in-cell pipe)
+        cells = [_clean(c) for c in re.split(r"(?<!\\)\|", line)[1:-1]]
+        if len(cells) != 2 or not cells[0] or \
+                set(cells[0]) <= {"-", " "} or cells[0].lower() == "chain":
+            continue                           # header / separator
+        rows.append(Row(cells[0], cells[1]))
+    return rows
+
+
+# Row-pattern -> representative probe chains.  Classification keys off
+# the chain cell's CONTENT so wording tweaks don't break the parser;
+# an unclassifiable row is itself a finding (the probe map must grow
+# with the table).
+def _probes_for(chain: str):
+    c = chain.lower()
+    if "anything else" in c:
+        return ("rel:0.001|pack:8|zero|narrow",
+                "abs:0.001|pack:32|shuffle|narrow")
+    if c.startswith("pred"):
+        return ("delta|abs:0.001|pack:16",)
+    if "narrow|ent" in c:
+        return ("abs:0.001|pack:16|narrow|ent",)
+    if "zero" in c or "narrow" in c:
+        return ("abs:0.001|pack:16|zero", "abs:0.001|pack:16|narrow")
+    if c.replace(" ", "") == "quant|pack":
+        return ("abs:0.001|pack:16",)
+    return None
+
+
+def _expected_from(kernel: str):
+    """The kernel cell's claim: None for open slots / jit reference,
+    else `kernels/x.py::fn` as the dotted `kernel_dispatch` name."""
+    k = kernel.lower()
+    if "open slot" in k or "jit reference" in k:
+        return None
+    m = re.search(r"kernels/(\w+)\.py::(\w+)", kernel)
+    if not m:
+        return f"<unparseable: {kernel}>"
+    return f"repro.kernels.{m.group(1)}.{m.group(2)}"
+
+
+def check_dispatch(rows, *, path: str = "DESIGN.md") -> list:
+    """Probe each table row against the real `kernel_dispatch`.  Pure
+    parse + dataclass dispatch — no devices touched."""
+    from repro.core.pipeline import parse_pipeline
+
+    findings = []
+    if not rows:
+        return [Finding(
+            "RC005", path, 1,
+            "the §7 kernel-dispatch table is missing (or lost its "
+            "anchor)", "restore the '**Kernel dispatch.**' table")]
+    seen = set()
+    for row in rows:
+        probes = _probes_for(row.chain)
+        if probes is None:
+            findings.append(Finding(
+                "RC005", path, 1,
+                f"dispatch-table row {row.chain!r} has no probe "
+                f"mapping", "extend analysis/dispatch.py's probe "
+                "classifier with the new row's representative chains"))
+            continue
+        seen.add(probes)
+        expected = _expected_from(row.kernel)
+        if isinstance(expected, str) and expected.startswith("<"):
+            findings.append(Finding(
+                "RC005", path, 1,
+                f"dispatch-table row {row.chain!r} claims an "
+                f"unparseable kernel {row.kernel!r}",
+                "use kernels/<file>.py::<fn>, 'open slot', or "
+                "'jit reference'"))
+            continue
+        for spec in probes:
+            actual = parse_pipeline(spec).kernel_dispatch()
+            if actual != expected:
+                findings.append(Finding(
+                    "RC005", path, 1,
+                    f"§7 dispatch table desync: row {row.chain!r} "
+                    f"claims {expected or 'jit reference'} but "
+                    f"kernel_dispatch({spec!r}) routes to "
+                    f"{actual or 'jit reference'}",
+                    "update the table row (or kernel_dispatch) so doc "
+                    "and code agree"))
+    if len(seen) < 5:
+        findings.append(Finding(
+            "RC005", path, 1,
+            f"§7 dispatch table covers only {len(seen)} of the 5 "
+            f"routing classes (pack / lossless / ent slot / pred slot "
+            f"/ reference)", "restore the missing rows"))
+    return findings

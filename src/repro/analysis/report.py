@@ -1,0 +1,53 @@
+"""Reporting + baseline for the guarantee linter (DESIGN.md §13).
+
+The committed `analysis-baseline.json` holds the keys of ACCEPTED
+findings; the gate fails only on findings not in it.  The tree starts
+(and should stay) clean — the baseline exists so an unavoidable
+finding can be accepted explicitly, reviewed in diff, instead of
+rotting as a perma-red gate.  Baseline keys omit line numbers
+(`Finding.key`), so edits above an accepted finding do not resurrect
+it as "new".
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+BASELINE_NAME = "analysis-baseline.json"
+
+
+def load_baseline(path) -> set:
+    p = Path(path)
+    if not p.exists():
+        return set()
+    doc = json.loads(p.read_text())
+    return set(doc.get("findings", []))
+
+
+def write_baseline(path, findings) -> None:
+    doc = {"findings": sorted({f.key() for f in findings})}
+    Path(path).write_text(json.dumps(doc, indent=1) + "\n")
+
+
+def split_new(findings, baseline: set):
+    """-> (new findings, baselined findings)."""
+    new = [f for f in findings if f.key() not in baseline]
+    old = [f for f in findings if f.key() in baseline]
+    return new, old
+
+
+def render_text(new, old) -> str:
+    lines = [f.render() for f in new]
+    if old:
+        lines.append(f"({len(old)} baselined finding"
+                     f"{'s' if len(old) != 1 else ''} suppressed)")
+    lines.append(f"{len(new)} new finding{'s' if len(new) != 1 else ''}")
+    return "\n".join(lines)
+
+
+def render_json(new, old) -> str:
+    return json.dumps({
+        "new": [f.as_dict() for f in new],
+        "baselined": [f.as_dict() for f in old],
+        "count": len(new),
+    }, indent=1)

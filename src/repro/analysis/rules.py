@@ -1,0 +1,329 @@
+"""The guarantee-lesson rules, GL001-GL007 (DESIGN.md §13).
+
+Each rule encodes ONE pitfall this repo (or the source paper) actually
+hit; the docstrings name the PR that learned the lesson.  Rules are
+heuristic by design — they pattern-match the shape of the bug class,
+and per-file `# repro: noqa GL00x -- reason` handles the sound
+exceptions.  All pure stdlib `ast`; no JAX import.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .walker import Finding, register_rule
+
+_FLOAT_DTYPES = {"float16", "float32", "float64", "bfloat16"}
+
+
+# ------------------------------------------------------- ast utilities ---
+
+def _funcs(tree):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of a Name/Attribute chain ('jax.debug.print');
+    '' for anything unresolvable."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _idents(node):
+    """Every Name id and Attribute attr in a subtree."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Attribute):
+            yield n.attr
+
+
+def _has_float_dtype(node) -> bool:
+    """Does this subtree mention a floating dtype (astype(f32), jnp.float32
+    constructor/attribute, dtype='float32' strings)?"""
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)):
+            if (n.id if isinstance(n, ast.Name) else n.attr) in _FLOAT_DTYPES:
+                return True
+        elif isinstance(n, ast.Constant) and n.value in _FLOAT_DTYPES:
+            return True
+    return False
+
+
+def _calls(node, names: set):
+    """Call nodes in a subtree whose (last-segment) callee name is in
+    `names` — matches both `sum(...)` and `jnp.sum(...)`."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            d = _dotted(n.func)
+            if d and d.split(".")[-1] in names:
+                yield n
+
+
+def _name_segments(name: str) -> set:
+    return set(name.lower().split("_")) - {""}
+
+
+# ---------------------------------------------------------------- rules ---
+
+class GL001:
+    """Float-typed accumulation in wire/bit accounting (PR 5's drift
+    class): an f32 sum over word/bit counts rounds past 2^24 and the
+    reported wire size silently diverges from the shipped one.  The
+    contract (codec.transmitted_bits): accumulate exact int32 words,
+    convert to float ONCE at the end."""
+    id = "GL001"
+    title = "float-typed accumulation in wire/bit accounting"
+    hint = ("accumulate word counts as int32 and convert once via "
+            "codec.transmitted_bits (the PR 5 fix)")
+    _SCOPE = re.compile(r"wire_bits|wire_bytes|transmitted|bytes_moved"
+                        r"|account")
+
+    def check(self, tree, text, path):
+        for fn in _funcs(tree):
+            if not self._SCOPE.search(fn.name):
+                continue
+            for call in _calls(fn, {"sum", "cumsum"}):
+                # the float marker must sit INSIDE the reduction — an
+                # astype on the summed result is the sanctioned
+                # convert-once pattern, not the drift class
+                if any(_has_float_dtype(a) for a in call.args) or \
+                        any(_has_float_dtype(k.value) for k in call.keywords):
+                    yield Finding(
+                        self.id, path, call.lineno,
+                        f"`{fn.name}` accumulates in floating point "
+                        f"inside accounting (f32 sums drift past 2^24 "
+                        f"words)", self.hint)
+
+
+class GL002:
+    """Reconstruction acceptance without the contracted-overflow guard
+    (PR 1's ABS bug): `|x - bin*eb2| <= eb` contracts to a finite, in-
+    bound difference when `bin*eb2` overflows to inf with x finite —
+    the check PASSES and the decoder ships inf.  Any acceptance test
+    over a product reconstruction must also check the product (or the
+    difference's operands) with isfinite."""
+    id = "GL002"
+    title = "reconstruction check missing the overflow guard"
+    hint = ("guard the reconstruction with jnp.isfinite(recon) before "
+            "accepting |x - recon| <= eb (the PR 1 fix)")
+
+    def check(self, tree, text, path):
+        for fn in _funcs(tree):
+            body_ids = set(_idents(fn))
+            if "isfinite" in body_ids:
+                continue
+            assigned = {}
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                        isinstance(n.targets[0], ast.Name):
+                    assigned[n.targets[0].id] = n.value
+
+            def has_product(node) -> bool:
+                for s in ast.walk(node):
+                    if isinstance(s, ast.BinOp) and isinstance(s.op, ast.Mult):
+                        return True
+                    if isinstance(s, ast.Name) and s.id in assigned:
+                        v = assigned[s.id]
+                        for t in ast.walk(v):
+                            if isinstance(t, ast.BinOp) and \
+                                    isinstance(t.op, ast.Mult):
+                                return True
+                return False
+
+            for cmp in ast.walk(fn):
+                if not (isinstance(cmp, ast.Compare)
+                        and all(isinstance(op, (ast.LtE, ast.Lt))
+                                for op in cmp.ops)):
+                    continue
+                for call in _calls(cmp.left, {"abs", "absolute"}):
+                    sub = next((s for a in call.args for s in ast.walk(a)
+                                if isinstance(s, ast.BinOp)
+                                and isinstance(s.op, ast.Sub)), None)
+                    if sub is not None and has_product(sub):
+                        yield Finding(
+                            self.id, path, cmp.lineno,
+                            f"`{fn.name}` accepts |x - recon| against a "
+                            f"bound with no isfinite guard on the "
+                            f"product reconstruction", self.hint)
+                        break
+
+
+class GL003:
+    """TIGHTEN in an audit/violation predicate (PR 9's gotcha,
+    inverted): encoders must accept only `diff <= eb*TIGHTEN` (§1
+    rounding-tie rule), but auditors must test the PLAIN bound — a
+    tightened audit flags clean encodes at the margin as violations,
+    and the margin is the whole point of tightening."""
+    id = "GL003"
+    title = "TIGHTEN used in an audit/violation predicate"
+    hint = ("audit against the plain requested bound; only encoders "
+            "tighten (core.audit.audit_report's contract)")
+    _SCOPE = re.compile(r"audit|verify|violat|detect")
+
+    def check(self, tree, text, path):
+        for fn in _funcs(tree):
+            if not self._SCOPE.search(fn.name):
+                continue
+            for n in ast.walk(fn):
+                ident = (n.id if isinstance(n, ast.Name)
+                         else n.attr if isinstance(n, ast.Attribute) else "")
+                if "tighten" in ident.lower():
+                    yield Finding(
+                        self.id, path, n.lineno,
+                        f"`{fn.name}` references `{ident}` — auditors "
+                        f"must use the plain bound, not the encoder's "
+                        f"tightened one", self.hint)
+
+
+class GL004:
+    """Open-loop prediction (the classic predictor bug, §9): a
+    predictor that reads the ORIGINAL value plane instead of the
+    reconstructed/bin plane diverges from the decoder (which only has
+    reconstructions), and the §1 bound quietly becomes unbounded.
+    `encode_bins`/`decode_bins` implementations may only touch the bin
+    plane they are handed."""
+    id = "GL004"
+    title = "open-loop prediction (reads the original plane)"
+    hint = ("predict from the bin/reconstructed plane only — the "
+            "closed-loop contract of core.predict (DESIGN.md §9)")
+    _PLANE_NAMES = {"x", "values", "orig", "original", "raw", "x_orig"}
+
+    def check(self, tree, text, path):
+        for fn in _funcs(tree):
+            if fn.name not in ("encode_bins", "decode_bins"):
+                continue
+            args = {a.arg for a in fn.args.args} | \
+                {a.arg for a in fn.args.kwonlyargs}
+            leaked = args & self._PLANE_NAMES
+            used = {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+            hit = sorted(leaked | (used & self._PLANE_NAMES))
+            if hit:
+                yield Finding(
+                    self.id, path, fn.lineno,
+                    f"`{fn.name}` touches the original value plane "
+                    f"({', '.join(hit)}) — predictors must be closed-"
+                    f"loop on the bin plane", self.hint)
+
+
+class GL005:
+    """Transmitted length consumed without validation (§12's length
+    guard): slicing a payload by a wire-carried `payload_len` without
+    `check_payload_len` (host) or clamping (traced) lets a corrupt
+    length index garbage or silently truncate.  §6's rule: the header
+    plane, not the length, is the decode authority."""
+    id = "GL005"
+    title = "transmitted length used without validation"
+    hint = ("call audit.check_payload_len (host) or clamp via "
+            "jnp.clip/minimum (traced) before consuming payload_len")
+    _VALIDATORS = {"check_payload_len", "clip", "minimum", "clamp",
+                   "gather_chunks", "decode_words", "decode_word_stages"}
+
+    def check(self, tree, text, path):
+        for fn in _funcs(tree):
+            called = {_dotted(c.func).split(".")[-1]
+                      for c in ast.walk(fn) if isinstance(c, ast.Call)}
+            if called & self._VALIDATORS:
+                continue
+            # names bound from a `.payload_len` attribute, plus direct use
+            len_names = {"payload_len"}
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 and \
+                        isinstance(n.targets[0], ast.Name) and \
+                        any(i == "payload_len" for i in _idents(n.value)):
+                    len_names.add(n.targets[0].id)
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Subscript) and \
+                        set(_idents(n.slice)) & len_names:
+                    yield Finding(
+                        self.id, path, n.lineno,
+                        f"`{fn.name}` indexes by a transmitted "
+                        f"payload_len with no length validation in "
+                        f"scope", self.hint)
+
+
+class GL006:
+    """Non-deterministic benchmark seeding: every committed BENCH_*
+    artifact and fault plan must reproduce across processes, so seeds
+    follow ONE convention — `np.random.default_rng(zlib.crc32(name))`
+    (benchmarks/datasets.py).  Bare `default_rng()` is time-seeded;
+    literal-int seeds fork the convention and collide; `hash()` varies
+    per process under PYTHONHASHSEED."""
+    id = "GL006"
+    title = "benchmark seeding off the crc32 convention"
+    hint = ("seed as np.random.default_rng(zlib.crc32(name.encode())) — "
+            "the datasets.py/guard.py discipline")
+
+    def check(self, tree, text, path):
+        # host-side np seeding only: jax.random.PRNGKey(literal) is a
+        # pure function of its int (deterministic by construction), so
+        # keys are out of scope — the convention governs the np RNGs
+        # that generate benchmark/fault data by suite NAME
+        for call in _calls(tree, {"default_rng", "seed"}):
+            d = _dotted(call.func)
+            if d.split(".")[-1] == "seed" and "random" not in d:
+                continue                       # some other .seed() method
+            if not call.args and not call.keywords:
+                yield Finding(
+                    self.id, path, call.lineno,
+                    "unseeded RNG construction (time-seeded, "
+                    "irreproducible)", self.hint)
+                continue
+            ok = any("crc32" in _idents(a) for a in call.args)
+            hashed = any(isinstance(c, ast.Call)
+                         and _dotted(c.func) == "hash"
+                         for a in call.args for c in ast.walk(a))
+            if hashed:
+                yield Finding(
+                    self.id, path, call.lineno,
+                    "RNG seeded via hash() (varies per process under "
+                    "PYTHONHASHSEED)", self.hint)
+            elif not ok:
+                yield Finding(
+                    self.id, path, call.lineno,
+                    "RNG seeded off the crc32 convention "
+                    "(irreproducible-by-name)", self.hint)
+
+
+class GL007:
+    """Host callbacks in jitted codec paths: `print`/`jax.debug.*`/
+    `io_callback`/`pure_callback` inside encode/decode/quantize
+    functions force host syncs (or silently trace-once), wreck the
+    fused-kernel perf story, and can change semantics under vmap/jit.
+    Debug output belongs in callers, never in the codec."""
+    id = "GL007"
+    title = "host callback inside a jitted encode/decode path"
+    hint = ("move the print/debug call to the caller, or use the "
+            "verify=/AuditReport plumbing for runtime observability")
+    _SEGMENTS = {"encode", "decode", "pack", "unpack", "quantize",
+                 "dequantize"}
+    _BANNED = {"print", "breakpoint", "io_callback", "pure_callback"}
+
+    def check(self, tree, text, path):
+        if "benchmarks" in path:
+            return                 # benches print by design (host-side)
+        for fn in _funcs(tree):
+            if not (_name_segments(fn.name) & self._SEGMENTS):
+                continue
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                d = _dotted(call.func)
+                if d.startswith("jax.debug") or \
+                        (d and d.split(".")[-1] in self._BANNED):
+                    yield Finding(
+                        self.id, path, call.lineno,
+                        f"`{fn.name}` calls `{d}` inside a codec path",
+                        self.hint)
+
+
+for _rule in (GL001, GL002, GL003, GL004, GL005, GL006, GL007):
+    register_rule(_rule())

@@ -1,0 +1,116 @@
+"""Layer-1 lint engine (DESIGN.md §13): parse every file once, hand the
+tree to each registered rule, honor per-file suppressions.
+
+The rule registry mirrors `core.pipeline.STAGES`: adding a rule = one
+class + one `register_rule` call (+ a DESIGN.md §13 row — enforced by
+the Layer-2 documentation contract).  Rules are pure stdlib `ast`
+visitors so Layer 1 runs with no JAX installed at all.
+
+Suppressions are per FILE, not per line: a comment anywhere in the file
+
+    # repro: noqa GL001 -- kernels accumulate in f64, accounted exactly
+
+turns the named rule(s) off for that file.  The reason after `--` is
+MANDATORY — a bare `# repro: noqa GL00x` emits a GL000 finding instead
+of suppressing anything, so every accepted exception is self-
+documenting at the suppression site.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+# matches "repro: noqa GL001" / "repro: noqa GL001,GL005 -- reason"
+# comment markers (see the module docstring for the full grammar)
+_NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa\s+([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"(?:\s*--\s*(\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint/contract finding: rule id, location, message, fix hint."""
+    rule: str
+    path: str
+    line: int
+    message: str
+    hint: str = ""
+
+    def key(self) -> str:
+        """Baseline identity: stable across line-number churn (edits
+        above a finding must not make it 'new'), so the line is not
+        part of the key."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tail = f"  [fix: {self.hint}]" if self.hint else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{tail}"
+
+
+# ------------------------------------------------------- rule registry ---
+#
+# id -> rule object with:  .id  .title (the one-line lesson)  .hint
+# (default fix guidance) and .check(tree, text, path) -> iter[Finding].
+RULES: dict = {}
+
+
+def register_rule(rule) -> None:
+    """Register a lint rule (the `STAGES` pattern: one entry per rule).
+    The Layer-2 contract checker demands a DESIGN.md §13 row per id."""
+    RULES[rule.id] = rule
+
+
+def parse_suppressions(text: str, path: str):
+    """-> (suppressed rule-id set, [Finding for reasonless noqas])."""
+    suppressed, bad = set(), []
+    for ln, line in enumerate(text.splitlines(), 1):
+        m = _NOQA_RE.search(line)
+        if not m:
+            continue
+        ids = {t.strip() for t in m.group(1).split(",")}
+        if m.group(2) is None:
+            bad.append(Finding(
+                "GL000", path, ln,
+                f"suppression of {sorted(ids)} carries no reason",
+                "append ` -- <why this exception is sound>` to the noqa"))
+            continue
+        suppressed |= ids
+    return suppressed, bad
+
+
+def lint_file(path, *, rules=None) -> list:
+    """Run the registered rules over one file.  Returns findings with
+    per-file suppressions already applied (GL000 reason-enforcement
+    findings are never suppressible)."""
+    path = Path(path)
+    rel = str(path)
+    text = path.read_text()
+    try:
+        tree = ast.parse(text, filename=rel)
+    except SyntaxError as e:
+        return [Finding("GL000", rel, e.lineno or 1,
+                        f"file does not parse: {e.msg}",
+                        "fix the syntax error")]
+    suppressed, findings = parse_suppressions(text, rel)
+    for rule in (RULES.values() if rules is None
+                 else [RULES[r] for r in rules]):
+        if rule.id in suppressed:
+            continue
+        findings.extend(rule.check(tree, text, rel))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths, *, rules=None) -> list:
+    """Walk `paths` (files or directories) and lint every `*.py`."""
+    out = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(lint_file(f, rules=rules))
+    return out

@@ -88,6 +88,15 @@ def _rotl(x, r: int):
     return (x << r) | (x >> (32 - r))
 
 
+def plane_checksum(plane) -> jnp.ndarray:
+    """The §12 fold over ONE plane (a uint32 scalar digest) — the
+    building block `wire_checksum` combines per container, exposed for
+    per-hop coverage: `Transport`'s packed-domain ring checksums each
+    `ppermute` hop payload with this (DESIGN.md §8), where the whole-
+    wire checksum cannot see intermediate hops."""
+    return _fold(plane)
+
+
 def _planes(wire) -> list:
     """The covered planes of a wire container, in a fixed order.  Duck-typed:
     `eb2` -> PackedKV (it also has chain_id), `chain_id` -> SelectedWire,

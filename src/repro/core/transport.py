@@ -231,29 +231,20 @@ class Transport:
             gathered = self.fault(gathered)
         return self._verify_received(gathered, verify, "all_gather")
 
-    def reduce_sum(self, enc: Encoded, pipe: Pipeline, n: int, axis):
-        """Sum of every pod's decoded tensor over `axis` (call inside
-        shard_map).  Ring-reduces in the packed domain when the §8
-        compatibility rule holds (checked statically + runtime-agreed via
-        pmax/pmin so all pods branch together); otherwise — and always
-        with reduce='gather' — gathers the wires and sums the per-pod
-        decodes, the pre-transport reference path.  Bit-identical either
-        way."""
-        qc = pipe.qcfg()
-        p = axis_size_static(axis)
+    def _ring_ok(self, pipe: Pipeline, qc, p) -> bool:
         # Pred chains never ring-reduce: the wire carries folded residual
         # codes, and the delta of a sum is not the sum of the deltas once
         # each shard folds independently — decode-then-sum is the only
         # exact path (DESIGN.md §9), so they take the gather branch.
         # Selector wires (§11) likewise: each shard picked its own chain,
         # so the word planes are not grid-aligned across pods.
-        ring_ok = (self.reduce == "auto" and isinstance(pipe, Pipeline)
-                   and qc.mode == "abs"
-                   and not pipe.stages and not pipe.pred
-                   and p is not None and p > 1
-                   and p * qc.maxbin < (1 << 24))
-        if not ring_ok:
-            return self._gather_sum(enc, pipe, n, axis)
+        return (self.reduce == "auto" and isinstance(pipe, Pipeline)
+                and qc.mode == "abs"
+                and not pipe.stages and not pipe.pred
+                and p is not None and p > 1
+                and p * qc.maxbin < (1 << 24))
+
+    def _ring_compat(self, enc, axis):
         # runtime agreement: same pow2 grid everywhere + no outliers
         # anywhere (NaN eb compares unequal -> gather, like any mismatch)
         compat = jax.lax.pmax(enc.n_outliers, axis) == 0
@@ -261,16 +252,77 @@ class Transport:
             eb_hi = jax.lax.pmax(enc.eb, axis)
             eb_lo = -jax.lax.pmax(-enc.eb, axis)
             compat = compat & (eb_hi == eb_lo)
-        return jax.lax.cond(
-            compat,
-            lambda _: self._ring_sum(enc, qc, n, axis, p),
-            lambda _: self._gather_sum(enc, pipe, n, axis),
-            None)
+        return compat
 
-    def reduce_mean(self, enc: Encoded, pipe: Pipeline, n: int, axis):
-        """reduce_sum / axis_size — the compressed-mean collective."""
-        p = jax.lax.psum(1, axis)          # axis size (old-JAX compatible)
-        return self.reduce_sum(enc, pipe, n, axis) / p
+    def _check_integrity_arg(self, enc, integrity: str):
+        """Host-side validation for the checked reduce (§12): the policy
+        must exist, be expressible in-graph ('drop' is the only one — a
+        traced collective cannot raise or re-request), and the wire must
+        carry a checksum for the gather fallback's per-shard verdicts."""
+        A.get_policy(integrity)            # fail fast on unknown names
+        if integrity != "drop":
+            raise ValueError(
+                f"reduce integrity={integrity!r}: in-graph reduction "
+                f"supports only the 'drop' policy (mask + renormalize); "
+                f"route 'raise'/'rerequest' host-side via "
+                f"all_gather(verify='mask') (DESIGN.md §12)")
+        if not A.has_checksum(enc):
+            raise ValueError(
+                "reduce with integrity= needs encode(integrity=True) "
+                "wires — no checksum carried (DESIGN.md §12)")
+
+    def reduce_sum(self, enc: Encoded, pipe: Pipeline, n: int, axis, *,
+                   integrity: str | None = None):
+        """Sum of every pod's decoded tensor over `axis` (call inside
+        shard_map).  Ring-reduces in the packed domain when the §8
+        compatibility rule holds (checked statically + runtime-agreed via
+        pmax/pmin so all pods branch together); otherwise — and always
+        with reduce='gather' — gathers the wires and sums the per-pod
+        decodes, the pre-transport reference path.  Bit-identical either
+        way.
+
+        `integrity='drop'` (§12) verifies every received contribution —
+        per-hop `plane_checksum`s on the ring (each hop payload rides
+        with its owner's digest, so corruption at ANY hop is caught by
+        every downstream rank), per-shard wire checksums on the gather
+        path — and drops failed contributions from the sum.  Requires
+        encode(integrity=True) wires.  NOTE: the dropped-shard sum is a
+        partial sum; use `reduce_mean` for the renormalized mean."""
+        if integrity is None:
+            qc = pipe.qcfg()
+            p = axis_size_static(axis)
+            if not self._ring_ok(pipe, qc, p):
+                return self._gather_sum(enc, pipe, n, axis)
+            return jax.lax.cond(
+                self._ring_compat(enc, axis),
+                lambda _: self._ring_sum(enc, qc, n, axis, p),
+                lambda _: self._gather_sum(enc, pipe, n, axis),
+                None)
+        total, _ = self._reduce_checked(enc, pipe, n, axis, integrity)
+        return total
+
+    def reduce_mean(self, enc: Encoded, pipe: Pipeline, n: int, axis, *,
+                    integrity: str | None = None, return_valid: bool = False):
+        """reduce_sum / axis_size — the compressed-mean collective.
+
+        `integrity='drop'` (§12): failed contributions (hop-corrupt ring
+        payloads, checksum-failed gathered shards) are dropped and the
+        mean renormalizes over the contributions THIS rank verified —
+        the `compressed_mean` drop semantics applied to the collective.
+        Each rank divides by its own valid count, so ranks downstream of
+        a corrupt link degrade independently instead of silently
+        averaging garbage.  `return_valid=True` appends the per-rank
+        valid-contribution count (int32; == axis size on a clean run) —
+        the observable `benchmarks/audit_bench.py`'s ring detection row
+        pins."""
+        if integrity is None:
+            p = jax.lax.psum(1, axis)      # axis size (old-JAX compatible)
+            mean = self.reduce_sum(enc, pipe, n, axis) / p
+            return (mean, jax.lax.psum(jnp.int32(1), axis)) \
+                if return_valid else mean
+        total, n_valid = self._reduce_checked(enc, pipe, n, axis, integrity)
+        mean = total / jnp.maximum(n_valid, 1).astype(total.dtype)
+        return (mean, n_valid) if return_valid else mean
 
     def send_pages(self, wire, src: int, dst: int, axis, *, verify=None):
         """Point-to-point: move a wire pytree from mesh rank `src` to
@@ -329,6 +381,54 @@ class Transport:
             cur = jax.lax.ppermute(cur, axis, perm)
             total = total + C.unpack_words(cur, n, qc.bin_bits)
         return dequantize_abs(total, qc, eb=enc.eb, dtype=jnp.float32)
+
+    def _reduce_checked(self, enc, pipe, n, axis, integrity: str):
+        # the §12 verified reduce: -> (masked sum, per-rank valid count).
+        # Both branches of the cond return the same (f32[n], int32) pair.
+        self._check_integrity_arg(enc, integrity)
+        qc = pipe.qcfg()
+        p = axis_size_static(axis)
+        if not self._ring_ok(pipe, qc, p):
+            return self._gather_sum_checked(enc, pipe, n, axis)
+        return jax.lax.cond(
+            self._ring_compat(enc, axis),
+            lambda _: self._ring_sum_checked(enc, qc, n, axis, p),
+            lambda _: self._gather_sum_checked(enc, pipe, n, axis),
+            None)
+
+    def _gather_sum_checked(self, enc, pipe, n, axis):
+        # gather fallback of the verified reduce: per-shard whole-wire
+        # checksum verdicts mask the per-pod decodes out of the sum.
+        enc_all, ok = self.all_gather(enc, axis, verify="mask")
+        dec = jax.vmap(lambda e: pipe.decode(e, n=n, kernels=False))(enc_all)
+        mask = ok.reshape((-1,) + (1,) * (dec.ndim - 1))
+        total = jnp.sum(jnp.where(mask, dec, jnp.zeros((), dec.dtype)),
+                        axis=0)
+        return total, jnp.sum(ok.astype(jnp.int32))
+
+    def _ring_sum_checked(self, enc, qc, n, axis, p: int):
+        # verified ring (§12): the hop wire is (payload, owner digest) —
+        # the digest is `audit.plane_checksum` computed ONCE by the
+        # plane's owner and ppermuted alongside through every hop, so a
+        # flip introduced at ANY link poisons the recomputed fold at
+        # every downstream rank (the whole-wire checksum never sees
+        # intermediate hops).  Failed hops are masked out of the int32
+        # bin accumulation and the valid count; own bins always count.
+        perm = [(i, (i + 1) % p) for i in range(p)]
+        total = C.unpack_words(enc.payload, n, qc.bin_bits)
+        cur, cs = enc.payload, A.plane_checksum(enc.payload)
+        n_valid = jnp.int32(1)
+        for _ in range(p - 1):
+            cur = jax.lax.ppermute(cur, axis, perm)
+            cs = jax.lax.ppermute(cs, axis, perm)
+            if self.fault is not None:     # §12 hook: corrupt the hop pair
+                cur, cs = self.fault((cur, cs))
+            ok = A.plane_checksum(cur) == cs
+            bins = C.unpack_words(cur, n, qc.bin_bits)
+            total = total + jnp.where(ok, bins, jnp.zeros((), bins.dtype))
+            n_valid = n_valid + ok.astype(jnp.int32)
+        return (dequantize_abs(total, qc, eb=enc.eb, dtype=jnp.float32),
+                n_valid)
 
     # --- accounting -------------------------------------------------------
 

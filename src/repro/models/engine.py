@@ -140,7 +140,10 @@ class DecodeEngine:
         self.requests: list = [None] * self.n_slots   # host-side slot table
         self._stats = dict(prefill_tokens=0, generated_tokens=0, steps=0,
                            wire_bytes=0.0, sends=0, inserts=0, evictions=0,
-                           audit_checks=0, audit_failures=0)
+                           audit_checks=0, audit_failures=0,
+                           audit_reports=0, audit_violations=0,
+                           audit_nonfinite=0, audit_overflow=0,
+                           audit_max_err=0.0)
         self._slot_audit = [dict(checks=0, failures=0)
                             for _ in range(self.n_slots)]
         self._step1 = jax.jit(self._one_step)
@@ -311,6 +314,24 @@ class DecodeEngine:
         wire-bytes-vs-raw denominator every report uses."""
         g, hd = self.cfg.n_kv_heads, self.cfg.head_dim
         return 2 * self.cfg.n_layers * self.seq * g * hd * 2
+
+    def record_audit(self, report) -> None:
+        """Fold a §12 `AuditReport` (or a list of them — the per-layer
+        shape quantize-side callers produce with verify=True) into the
+        engine's cumulative audit_* counters, surfaced by `stats()`.
+        Mirrors `train_loop.AuditCounters` on the training side, so both
+        runtimes report run-level bound violations the same way."""
+        # AuditReport IS a NamedTuple — dispatch on the counter field,
+        # not on tuple-ness, to tell one report from a list of them
+        for rep in (report,) if hasattr(report, "violations") else report:
+            if rep is None:
+                continue
+            self._stats["audit_reports"] += 1
+            self._stats["audit_violations"] += int(rep.violations)
+            self._stats["audit_nonfinite"] += int(rep.n_nonfinite)
+            self._stats["audit_overflow"] += int(rep.overflow)
+            self._stats["audit_max_err"] = max(
+                self._stats["audit_max_err"], float(rep.max_err))
 
     def stats(self) -> dict:
         out = dict(self._stats)

@@ -25,6 +25,12 @@ Five fault classes (`FAULT_CLASSES`):
   nan_input        corrupt the *input* before encode — caught by the
                    `verify=` audit report (`n_nonfinite > 0`), not the
                    checksum, which by design covers the wire, not x
+  hop_bitflip      flip one bit of an IN-FLIGHT ring-reduce hop payload
+                   (`corrupt_hop` as a `Transport(fault=...)` hook) —
+                   caught by the per-hop `plane_checksum` the verified
+                   reduce carries (`reduce_mean(integrity='drop')`), not
+                   by the whole-wire checksum, which never sees
+                   intermediate hops
 
 Determinism mirrors `benchmarks/datasets.py`: every plan seeds
 `np.random.default_rng` from `zlib.crc32` of its suite/class name, so
@@ -44,7 +50,7 @@ import jax.numpy as jnp
 from repro.core import audit
 
 FAULT_CLASSES = ("payload_bitflip", "header_bitflip", "length_truncate",
-                 "chainid_swap", "nan_input")
+                 "chainid_swap", "nan_input", "hop_bitflip")
 
 
 def _swap_leaf(wire, old_leaf, new_arr):
@@ -61,7 +67,10 @@ def applicable_classes(wire) -> tuple:
     `chainid_swap` needs a transmitted chain id (selector wires and
     selected `PackedKV`s); `nan_input` is an input fault, never a wire
     fault, so it is not listed here — harnesses add it via
-    `FaultPlan.corrupt_input` + the encode-side audit report."""
+    `FaultPlan.corrupt_input` + the encode-side audit report.
+    `hop_bitflip` is likewise not a stored-wire fault: it corrupts an
+    in-flight collective hop via `FaultPlan.corrupt_hop` mounted as a
+    `Transport(fault=...)` hook."""
     out = ["payload_bitflip", "header_bitflip", "length_truncate"]
     if getattr(wire, "chain_id", None) is not None:
         out.append("chainid_swap")
@@ -100,12 +109,42 @@ class FaultPlan:
             a.flat[j] = vals[i % 3]
         return jnp.asarray(a)
 
+    # --- in-flight faults -------------------------------------------------
+
+    def corrupt_hop(self, hop):
+        """`hop_bitflip`: in-graph corruption hook for the collective
+        fault hook (`Transport(fault=plan.corrupt_hop)`).  Flips one
+        deterministic bit in the largest uint32 leaf of whatever pytree
+        the transport hands the hook — the ring hop's word plane, or the
+        payload of a gathered wire on the fallback path — so the per-hop
+        `plane_checksum` (ring) / whole-wire checksum (gather) must
+        catch it.  Traceable: positions are fixed host-side from the
+        plan's rng at trace time; `FaultPlan` is frozen, so the bound
+        method is hashable as `Transport` requires."""
+        assert self.cls == "hop_bitflip", self.cls
+        leaves, treedef = jax.tree_util.tree_flatten(hop)
+        targets = [(int(lf.size), i) for i, lf in enumerate(leaves)
+                   if getattr(lf, "dtype", None) == jnp.uint32
+                   and lf.size > 1]
+        if not targets:
+            return hop
+        _, idx = max(targets)
+        r = self.rng()
+        flat = leaves[idx].reshape(-1)
+        word = int(r.integers(0, flat.size))
+        bit = jnp.uint32(1) << jnp.uint32(int(r.integers(0, 32)))
+        flat = flat.at[word].set(flat[word] ^ bit)
+        leaves[idx] = flat.reshape(leaves[idx].shape)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
     # --- wire faults ------------------------------------------------------
 
     def corrupt_wire(self, wire):
         """Apply this plan's wire fault to a copy of `wire` (any of
         `Encoded` / `SelectedWire` / `PackedKV`)."""
-        assert self.cls != "nan_input", "nan_input corrupts x, not wires"
+        assert self.cls not in ("nan_input", "hop_bitflip"), (
+            f"{self.cls} is not a stored-wire fault (corrupt_input / "
+            f"corrupt_hop)")
         assert self.cls in applicable_classes(wire), (
             f"{self.cls} not applicable to {type(wire).__name__}")
         return getattr(self, f"_{self.cls}")(wire)

@@ -83,12 +83,58 @@ class StragglerMonitor:
         return is_straggler
 
 
+class AuditCounters:
+    """Cumulative §12 audit observability for the loop: step functions
+    that encode with verify=True surface their `AuditReport`(s) under
+    metrics["audit"] (one report or a list), and the loop folds them
+    here so a run-level "how many bound violations so far" exists
+    without the caller wiring its own accumulator.  Mirrors
+    `DecodeEngine.stats()`'s audit_* counters on the serving side."""
+
+    def __init__(self):
+        self.reports = 0
+        self.violations = 0
+        self.n_nonfinite = 0
+        self.overflow = 0
+        self.max_err = 0.0
+
+    def fold(self, metrics) -> None:
+        if not isinstance(metrics, dict) or "audit" not in metrics:
+            return
+        reps = metrics["audit"]
+        # AuditReport IS a (Named)tuple — a single report is one with
+        # the counter fields, anything else iterable is a list of them
+        if hasattr(reps, "violations"):
+            reps = (reps,)
+        for rep in reps:
+            if rep is None:
+                continue
+            self.reports += 1
+            self.violations += int(rep.violations)
+            self.n_nonfinite += int(rep.n_nonfinite)
+            self.overflow += int(rep.overflow)
+            self.max_err = max(self.max_err, float(rep.max_err))
+
+    def as_dict(self) -> dict:
+        return dict(audit_reports=self.reports,
+                    audit_violations=self.violations,
+                    audit_nonfinite=self.n_nonfinite,
+                    audit_overflow=self.overflow,
+                    audit_max_err=self.max_err)
+
+
 def run(step_fn: Callable, state, batch_fn: Callable,
         ckpt: CheckpointManager, cfg: TrainLoopConfig,
         start_step: int = 0, on_metrics: Optional[Callable] = None):
     """Generic loop: state = step_fn(state, batch) jitted by the caller.
-    Returns (state, last_step, interrupted)."""
+    Returns (state, last_step, interrupted).
+
+    When step_fn's metrics dict carries an "audit" entry (an
+    `AuditReport` or list of them, from encode(verify=True)), the loop
+    accumulates run-level counters and hands `on_metrics` the dict with
+    an extra "audit_cumulative" key (see `AuditCounters`)."""
     monitor = StragglerMonitor(cfg.straggler_factor)
+    audit = AuditCounters()
     step = start_step
     with PreemptionGuard() as guard:
         while step < cfg.total_steps:
@@ -97,8 +143,12 @@ def run(step_fn: Callable, state, batch_fn: Callable,
             jax.block_until_ready(jax.tree.leaves(state)[0])
             dt = time.perf_counter() - t0
             straggle = monitor.record(step, dt)
+            audit.fold(metrics)
             step += 1
             if on_metrics and (step % cfg.log_every == 0 or straggle):
+                if isinstance(metrics, dict) and audit.reports:
+                    metrics = dict(metrics,
+                                   audit_cumulative=audit.as_dict())
                 on_metrics(step, metrics, dt, straggle)
             if step % cfg.checkpoint_every == 0 or guard.requested:
                 ckpt.save(step, state)

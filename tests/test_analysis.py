@@ -1,0 +1,236 @@
+"""Guarantee linter (DESIGN.md §13): every rule fires on its golden bad
+snippet, the real tree is clean, suppressions demand reasons, and the
+contract checker catches a seeded §7 dispatch-table desync.
+
+Layer 1 is pure stdlib — these tests import no JAX except for the
+clean-tree gate (which runs Layer 2's registry contracts on the CPU
+backend exactly as CI does).
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, lint_file, lint_paths
+from repro.analysis.walker import parse_suppressions
+from repro.analysis import dispatch as D
+from repro.analysis.__main__ import main as analysis_main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _lint(tmp_path, src, rules=None, name="snippet.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return lint_file(p, rules=rules)
+
+
+# --------------------------------------------- golden snippets per rule ---
+
+GOLDEN = {
+    "GL001": """
+        import jax.numpy as jnp
+
+        def wire_bits(stages, lens):
+            return jnp.sum(lens.astype(jnp.float32)) * 32.0
+        """,
+    "GL002": """
+        import jax.numpy as jnp
+
+        def apply_feedback(x, bins, eb2, eb):
+            recon = bins * eb2
+            ok = jnp.abs(x - recon) <= eb
+            return ok
+        """,
+    "GL003": """
+        import jax.numpy as jnp
+
+        def audit_violations(diff, eb, TIGHTEN):
+            return jnp.sum(diff > eb * TIGHTEN)
+        """,
+    "GL004": """
+        def encode_bins(bins, x):
+            return bins - x
+        """,
+    "GL005": """
+        def read_payload(payload, payload_len):
+            return payload[:payload_len]
+        """,
+    "GL006": """
+        import numpy as np
+
+        rng = np.random.default_rng(42)
+        """,
+    "GL007": """
+        def encode_packed(x):
+            print("encoding", x.shape)
+            return x
+        """,
+}
+
+
+@pytest.mark.parametrize("rule", sorted(GOLDEN))
+def test_golden_snippet_fires(tmp_path, rule):
+    findings = _lint(tmp_path, GOLDEN[rule], rules=[rule])
+    assert findings, f"{rule} missed its golden snippet"
+    assert all(f.rule == rule for f in findings)
+    assert all(f.hint for f in findings), "findings must carry a fix hint"
+
+
+@pytest.mark.parametrize("rule", sorted(GOLDEN))
+def test_clean_twin_does_not_fire(tmp_path, rule):
+    """The sanctioned version of each pattern stays clean."""
+    clean = {
+        # convert-ONCE: float lives on the sum result, not inside it
+        "GL001": """
+            import jax.numpy as jnp
+
+            def wire_bits(stages, lens):
+                return 32.0 * jnp.sum(lens).astype(jnp.float32)
+            """,
+        "GL002": """
+            import jax.numpy as jnp
+
+            def apply_feedback(x, bins, eb2, eb):
+                recon = bins * eb2
+                ok = jnp.isfinite(recon) & (jnp.abs(x - recon) <= eb)
+                return ok
+            """,
+        "GL003": """
+            import jax.numpy as jnp
+
+            def audit_violations(diff, eb):
+                return jnp.sum(diff > eb)
+            """,
+        "GL004": """
+            def encode_bins(bins, prev_bins):
+                return bins - prev_bins
+            """,
+        "GL005": """
+            import jax.numpy as jnp
+
+            def read_payload(payload, payload_len):
+                k = jnp.minimum(payload_len, payload.shape[-1])
+                return payload[:k]
+            """,
+        "GL006": """
+            import numpy as np
+            import zlib
+
+            rng = np.random.default_rng(zlib.crc32(b"suite-name"))
+            """,
+        "GL007": """
+            def encode_packed(x):
+                return x
+
+            def report(x):
+                print("host-side caller", x.shape)
+            """,
+    }
+    assert _lint(tmp_path, clean[rule], rules=[rule]) == []
+
+
+def test_gl006_flags_unseeded_and_hash(tmp_path):
+    src = """
+        import numpy as np
+
+        a = np.random.default_rng()
+        b = np.random.default_rng(hash("suite"))
+        """
+    msgs = [f.message for f in _lint(tmp_path, src, rules=["GL006"])]
+    assert any("unseeded" in m for m in msgs)
+    assert any("hash()" in m for m in msgs)
+
+
+# ------------------------------------------------------- suppressions ---
+
+def test_suppression_with_reason_suppresses(tmp_path):
+    src = """\
+        import numpy as np
+
+        # repro: noqa GL006 -- golden-snippet fixture, not a benchmark
+        rng = np.random.default_rng(42)
+        """
+    assert _lint(tmp_path, src) == []
+
+
+def test_suppression_without_reason_is_gl000(tmp_path):
+    src = """\
+        import numpy as np
+
+        # repro: noqa GL006
+        rng = np.random.default_rng(42)
+        """
+    findings = _lint(tmp_path, src)
+    rules = {f.rule for f in findings}
+    assert "GL000" in rules, "reasonless noqa must be flagged"
+    # a reasonless noqa suppresses NOTHING (walker docstring): the
+    # underlying finding fires too, so the gate stays red until the
+    # exception is justified
+    assert "GL006" in rules
+
+
+def test_parse_suppressions_multi_rule():
+    sup, bad = parse_suppressions(
+        "# repro: noqa GL001, GL005 -- fixture file\n", "f.py")
+    assert sup == {"GL001", "GL005"} and bad == []
+
+
+# ------------------------------------------------- registry + clean tree ---
+
+def test_every_registered_rule_has_a_golden_snippet():
+    assert set(GOLDEN) == set(RULES) - {"GL000"}, (
+        "add a golden snippet (and §13 row) for every new rule")
+
+
+def test_lint_paths_walks_directories(tmp_path):
+    (tmp_path / "pkg").mkdir()
+    (tmp_path / "pkg" / "m.py").write_text(
+        "def encode_packed(x):\n    print(x)\n    return x\n")
+    findings = lint_paths([tmp_path])
+    assert [f.rule for f in findings] == ["GL007"]
+
+
+def test_clean_tree_gate_exits_zero(capsys):
+    """The CI gate on the real tree: Layer 1 + Layer 2, zero new
+    findings.  This is the same invocation CI runs."""
+    rc = analysis_main([])
+    out = capsys.readouterr().out
+    assert rc == 0, f"analysis gate failed:\n{out}"
+
+
+# -------------------------------------------------- dispatch-table sync ---
+
+def _table(rows):
+    body = "\n".join(f"| `{c}` | {k} |" for c, k in rows)
+    return ("**Kernel dispatch.**\n\n"
+            "| chain | fused kernel |\n|---|---|\n" + body + "\n")
+
+
+def test_dispatch_checker_accepts_real_table():
+    rows = D.parse_dispatch_table((REPO / "DESIGN.md").read_text())
+    assert len(rows) >= 5
+    assert D.check_dispatch(rows) == []
+
+
+def test_dispatch_checker_catches_seeded_desync():
+    """Swap the §7 table's pack-only row to the wrong kernel: the
+    checker must notice the routing mismatch."""
+    text = _table([
+        ("quant\\|pack", "`kernels/lossless.py::encode_packed_lc`"),
+        ("quant\\|pack\\|zero` or `\\|narrow",
+         "`kernels/lossless.py::encode_packed_lc`"),
+        ("...\\|narrow\\|ent", "open slot: jit reference until then"),
+        ("pred\\|... (any §9 chain)", "open slot: jit reference until then"),
+        ("anything else", "jit reference (`core/codec.py`)"),
+    ])
+    rows = D.parse_dispatch_table(text)
+    assert len(rows) == 5
+    findings = D.check_dispatch(rows)
+    assert any(f.rule == "RC005" and "quant|pack" in f.message
+               for f in findings), findings
+
+
+def test_dispatch_checker_flags_missing_table():
+    findings = D.check_dispatch(D.parse_dispatch_table("no table here"))
+    assert findings and findings[0].rule == "RC005"

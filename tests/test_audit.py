@@ -470,3 +470,136 @@ def test_special_values_roundtrip_preserves_nan_payloads_and_kernel_wire():
     assert payload.size > 0          # the sweep plants payload NaNs
     np.testing.assert_array_equal(y[payload].view(np.uint32),
                                   x[payload].view(np.uint32))
+
+
+# ------------------------------------------ §12 in-flight hop integrity ---
+
+def test_hop_bitflip_plan_is_not_a_stored_wire_fault():
+    plan = guard.FaultPlan("ring", "hop_bitflip")
+    enc = parse_pipeline("abs:0.001|pack:16").encode(_grad(1 << 12),
+                                                     integrity=True)
+    assert "hop_bitflip" in guard.FAULT_CLASSES
+    assert "hop_bitflip" not in guard.applicable_classes(enc)
+    with pytest.raises(AssertionError):
+        plan.corrupt_wire(enc)
+    # the in-graph hook is deterministic and hashable (Transport needs
+    # a hashable fault for its frozen-dataclass identity)
+    hash(plan.corrupt_hop)
+    pay = jnp.zeros(64, jnp.uint32)
+    a = np.asarray(plan.corrupt_hop((pay, jnp.uint32(0)))[0])
+    b = np.asarray(plan.corrupt_hop((pay, jnp.uint32(0)))[0])
+    np.testing.assert_array_equal(a, b)
+    assert int(np.count_nonzero(a)) == 1     # exactly one flipped bit
+
+
+def test_reduce_integrity_arg_validation():
+    from repro.core.transport import TRANSPORT
+
+    pipe = parse_pipeline("abs:0.001|pack:16")
+    enc_plain = pipe.encode(_grad(1 << 12))
+    enc_ck = pipe.encode(_grad(1 << 12), integrity=True)
+    with pytest.raises(KeyError):
+        TRANSPORT.reduce_mean(enc_ck, pipe, 1 << 12, "pod",
+                              integrity="no-such-policy")
+    with pytest.raises(ValueError, match="drop"):
+        TRANSPORT.reduce_mean(enc_ck, pipe, 1 << 12, "pod",
+                              integrity="raise")
+    with pytest.raises(ValueError, match="integrity=True"):
+        TRANSPORT.reduce_mean(enc_plain, pipe, 1 << 12, "pod",
+                              integrity="drop")
+
+
+RING_INTEGRITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compression.grads import GradCompressionConfig, compress_shard
+    from repro.core.transport import TRANSPORT, Transport
+    from repro.runtime.guard import FaultPlan
+
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = jax.make_mesh((2,), ("pod",))
+    if hasattr(jax, "shard_map"):
+        def smap(f):
+            return jax.shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                                 out_specs=(P("pod", None), P("pod")),
+                                 axis_names={"pod"}, check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def smap(f):
+            return _shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                              out_specs=(P("pod", None), P("pod")),
+                              check_rep=False)
+
+    # bin_bits=16 keeps the data outlier-free (range ~ +-5 >> the 1e-2
+    # values) so the §8 ring genuinely fires — with outliers the compat
+    # gate would fall back to gather and never exercise the hop digests
+    cfg = GradCompressionConfig(eb_rel=2.0 ** -6, bin_bits=16,
+                                outlier_cap_frac=1 / 16)
+    pipe, n = cfg.pipe(), 4096
+
+    def run(tp, g):
+        def f(v):
+            shard, _ = compress_shard(v, cfg, integrity=True)
+            mean, nv = tp.reduce_mean(shard.enc, pipe, n, "pod",
+                                      integrity="drop", return_valid=True)
+            return mean, nv[None]
+        gd = jax.device_put(jnp.asarray(g),
+                            NamedSharding(mesh, P("pod", None)))
+        mean, nv = jax.jit(smap(f))(gd)
+        # the global mean comes back flat (p * n); fold to per-rank rows
+        return np.asarray(mean).reshape(2, n), np.asarray(nv).tolist()
+
+    r = np.random.default_rng(__import__("zlib").crc32(b"ring-hop-test"))
+    g = np.broadcast_to((r.standard_normal(n) * 1e-2).astype(np.float32),
+                        (2, n)).copy()
+
+    # clean verified ring: every hop passes and the mean matches the
+    # unchecked reduce bit-for-bit (identical shards -> the ring fires)
+    mean_c, valid_c = run(TRANSPORT, g)
+    assert valid_c == [2, 2], valid_c
+    def ref(v):
+        shard, _ = compress_shard(v, cfg, integrity=True)
+        m = TRANSPORT.reduce_mean(shard.enc, pipe, n, "pod")
+        nv = jax.lax.psum(jnp.int32(1), "pod")
+        return m, nv[None]
+    gd = jax.device_put(jnp.asarray(g), NamedSharding(mesh, P("pod", None)))
+    mean_ref, _ = jax.jit(smap(ref))(gd)
+    assert np.array_equal(mean_c.reshape(-1).view(np.uint32),
+                          np.asarray(mean_ref).reshape(-1).view(np.uint32)), (
+        "verified clean ring moved a bit vs the unchecked reduce")
+    print("CLEAN_OK")
+
+    # hop corruption: every received hop fails its owner digest, each
+    # rank renormalizes down to its own contribution
+    plan = FaultPlan("ring", "hop_bitflip")
+    mean_f, valid_f = run(Transport(fault=plan.corrupt_hop), g)
+    assert valid_f == [1, 1], valid_f
+    shard0, _ = compress_shard(jnp.asarray(g[0]), cfg)
+    assert int(shard0.enc.n_outliers) == 0, (
+        "ring precondition broken: data has outliers, gather would fire")
+    own = np.asarray(shard0.pipe.decode(shard0.enc, n=n, kernels=False))
+    assert np.array_equal(mean_f[0].view(np.uint32), own.view(np.uint32)), (
+        "rank 0's degraded mean is not its own decode")
+    print("HOP_DROP_OK")
+""")
+
+
+@pytest.mark.slow
+def test_ring_reduce_drops_corrupt_hops():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", RING_INTEGRITY_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    for marker in ("CLEAN_OK", "HOP_DROP_OK"):
+        assert marker in r.stdout, (marker, r.stdout, r.stderr)

@@ -222,6 +222,36 @@ def test_design_documents_the_audit_plane():
     assert "§12" in readme
 
 
+def test_design_documents_the_guarantee_linter():
+    """§13 is the linter contract: every registered GL rule id (plus
+    GL000, the suppression enforcer) and every RC contract id must have
+    its row, the suppression grammar and gate command must be stated,
+    and §7/§12 must cross-link to §13 (the dispatch table and the audit
+    conventions are what the linter enforces statically)."""
+    import sys
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.analysis import RULES
+
+    _, text = _design_sections()
+    assert "## §13" in text
+    sec13 = text.split("## §13", 1)[1].split("\n## §", 1)[0]
+    for rid in sorted(RULES) + ["GL000"]:
+        assert f"`{rid}`" in sec13, (
+            f"lint rule {rid!r} is undocumented in DESIGN.md §13 "
+            f"(the RC008 contract also fails CI on this)")
+    for rc in [f"RC00{i}" for i in range(1, 9)]:
+        assert rc in sec13, f"contract {rc!r} is undocumented in §13"
+    assert "repro: noqa" in sec13            # suppression grammar
+    assert "-- reason" in sec13 or "MANDATORY" in sec13
+    assert "python -m repro.analysis" in sec13
+    assert "analysis-baseline.json" in sec13
+    for n in (7, 12):
+        body = text.split(f"## §{n}", 1)[1].split(f"## §{n + 1}", 1)[0]
+        assert "§13" in body, f"DESIGN.md §{n} does not cross-link §13"
+    readme = (REPO / "README.md").read_text()
+    assert "analysis" in readme and "repro.analysis" in readme
+
+
 def test_registry_selector_sets_resolve():
     """Every SELECTOR_SETS entry must build: full-pipeline sets through
     `get_selector`, page-fragment sets (base None) through

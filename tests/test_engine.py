@@ -342,3 +342,32 @@ def test_streaming_migration_engine_two_devices():
     assert r.returncode == 0, r.stdout + r.stderr
     for marker in ("STREAM_OK", "CHURN_OK", "BIT_IDENTICAL_OK"):
         assert marker in r.stdout, (marker, r.stdout, r.stderr)
+
+
+def test_record_audit_folds_into_stats(tiny):
+    """§12 observability: `record_audit` accumulates AuditReports into
+    the cumulative audit_* counters of stats(), mirroring
+    train_loop.AuditCounters on the serving side."""
+    from repro.core.audit import AuditReport
+
+    def rep(violations=0, nonfinite=0, overflow=0, max_err=0.0):
+        return AuditReport(n=jnp.int32(64), violations=jnp.int32(violations),
+                           max_err=jnp.float32(max_err),
+                           n_nonfinite=jnp.int32(nonfinite),
+                           n_outliers=jnp.int32(0),
+                           overflow=jnp.asarray(bool(overflow)))
+
+    cfg, params, kv_cfg, _ = tiny
+    eng = E.DecodeEngine(cfg, params, n_slots=1, seq=256, kv_cfg=kv_cfg)
+    st = eng.stats()
+    assert st["audit_reports"] == 0 and st["audit_violations"] == 0
+
+    eng.record_audit(rep(max_err=1e-4))
+    eng.record_audit([rep(violations=1, max_err=5e-4), None,
+                      rep(nonfinite=2, overflow=1)])
+    st = eng.stats()
+    assert st["audit_reports"] == 3
+    assert st["audit_violations"] == 1
+    assert st["audit_nonfinite"] == 2
+    assert st["audit_overflow"] == 1
+    assert st["audit_max_err"] == pytest.approx(5e-4)

@@ -10,9 +10,19 @@ import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import QuantizerConfig
+from repro.core.audit import AuditReport
 from repro.data.pipeline import DataConfig, TokenPipeline
-from repro.runtime.train_loop import StragglerMonitor, TrainLoopConfig, run
+from repro.runtime.train_loop import (AuditCounters, StragglerMonitor,
+                                      TrainLoopConfig, run)
 from repro.runtime import elastic
+
+
+def _report(violations=0, nonfinite=0, overflow=0, max_err=0.0):
+    return AuditReport(n=jnp.int32(128), violations=jnp.int32(violations),
+                       max_err=jnp.float32(max_err),
+                       n_nonfinite=jnp.int32(nonfinite),
+                       n_outliers=jnp.int32(0),
+                       overflow=jnp.asarray(bool(overflow)))
 
 
 def small_state(seed=0):
@@ -83,6 +93,41 @@ def test_restart_exact_resume(tmp_path):
     state2, last2, _ = run(jstep, restored, batch_fn, mgr1, cfg,
                            start_step=8)
     assert float(state2["acc"]) == float(final["acc"])  # bit-identical path
+
+
+def test_audit_counters_fold_reports_and_lists():
+    c = AuditCounters()
+    c.fold({"loss": 1.0})                        # no audit key: no-op
+    c.fold({"audit": _report(max_err=1e-4)})
+    c.fold({"audit": [_report(violations=2, max_err=3e-4),
+                      None,                      # verify=False steps
+                      _report(nonfinite=1, overflow=1)]})
+    d = c.as_dict()
+    assert d["audit_reports"] == 3
+    assert d["audit_violations"] == 2
+    assert d["audit_nonfinite"] == 1
+    assert d["audit_overflow"] == 1
+    assert d["audit_max_err"] == pytest.approx(3e-4)
+
+
+def test_train_loop_surfaces_cumulative_audit_metrics(tmp_path):
+    """Step functions that encode with verify=True put reports under
+    metrics['audit']; on_metrics must see the run-level accumulation."""
+    def step_fn(state, batch):
+        s = {"acc": state["acc"] + 1, "step": state["step"] + 1}
+        return s, {"loss": 0.0, "audit": _report(violations=1)}
+
+    seen = []
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    cfg = TrainLoopConfig(total_steps=6, checkpoint_every=100, log_every=2)
+    run(step_fn, {"acc": jnp.float32(0), "step": jnp.int32(0)},
+        lambda i: {"tokens": jnp.zeros((1,), jnp.int32)}, mgr, cfg,
+        on_metrics=lambda step, m, dt, s: seen.append((step, m)))
+    assert [s for s, _ in seen] == [2, 4, 6]
+    cum = [m["audit_cumulative"] for _, m in seen]
+    assert [c["audit_reports"] for c in cum] == [2, 4, 6]
+    assert [c["audit_violations"] for c in cum] == [2, 4, 6]
+    assert "audit" in seen[0][1]                 # raw metrics untouched
 
 
 def test_straggler_monitor_flags_slow_steps():
